@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: timing, CSV emission, result storage."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall seconds per call (blocks on jax arrays)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, obj):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, default=str)
+    return path

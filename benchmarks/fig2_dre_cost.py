@@ -1,0 +1,93 @@
+"""Fig 2 analog: DRE learn/estimate time + memory vs sample count.
+
+KuLSIF-DRE vs KMeans-DRE (1 and 10 centroids) on 50-dimensional data —
+exactly the paper's comparison axes. Memory is the analytic working-set
+of each phase (Table IV formulas evaluated at the run's sizes), time is
+measured wall clock on this host.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json, timeit
+from repro.core.dre import KMeansDRE, KuLSIFDRE
+
+D = 50
+
+
+def mem_kulsif_learn(n, m, d=D):
+    return (m * m + n * m) * 4          # K11 + K12 f32
+
+
+def mem_kulsif_est(t, n, m, d=D):
+    return t * (n + m) * 4
+
+
+def mem_kmeans_learn(n, c, d=D):
+    return (c * d + n) * 4
+
+
+def mem_kmeans_est(t, c, d=D):
+    return (c * d + t) * 4
+
+
+def run(sizes=(256, 512, 1024, 2048, 4096), t_test=1024, aux=None):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    test = jax.random.normal(jax.random.fold_in(key, 99), (t_test, D))
+    for n in sizes:
+        x = jax.random.normal(key, (n, D))
+        m = aux or min(n, 1024)
+
+        ku = KuLSIFDRE(num_aux=m, sigma=3.0)
+        # .alpha is an array -> block_until_ready actually blocks (dataclass
+        # results are not pytrees; timing the bare learn() measured dispatch)
+        t_learn_ku = timeit(lambda: ku.learn(jax.random.fold_in(key, 1), x).alpha,
+                            iters=3)
+        fitted_ku = ku.learn(jax.random.fold_in(key, 1), x)
+        t_est_ku = timeit(lambda: fitted_ku.estimate(test), iters=3)
+
+        row = {"n": n, "kulsif_learn_s": t_learn_ku, "kulsif_est_s": t_est_ku,
+               "kulsif_learn_mem": mem_kulsif_learn(n, m),
+               "kulsif_est_mem": mem_kulsif_est(t_test, n, m)}
+        for c in (1, 10):
+            km = KMeansDRE(num_centroids=c)
+            t_learn = timeit(lambda: km.learn(jax.random.fold_in(key, 2), x).centroids,
+                             iters=3)
+            fitted = km.learn(jax.random.fold_in(key, 2), x)
+            t_est = timeit(lambda: fitted.distances(test), iters=3)
+            row[f"kmeans{c}_learn_s"] = t_learn
+            row[f"kmeans{c}_est_s"] = t_est
+            row[f"kmeans{c}_learn_mem"] = mem_kmeans_learn(n, c)
+            row[f"kmeans{c}_est_mem"] = mem_kmeans_est(t_test, c)
+        rows.append(row)
+        emit(f"fig2/dre_cost/n={n}", row["kulsif_learn_s"] * 1e6,
+             f"kulsif_learn={row['kulsif_learn_s']:.4f}s "
+             f"kmeans1_learn={row['kmeans1_learn_s']:.4f}s "
+             f"speedup={row['kulsif_learn_s']/row['kmeans1_learn_s']:.1f}x")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    sizes = (256, 512, 1024) if args.quick else (256, 512, 1024, 2048, 4096)
+    rows = run(sizes=sizes)
+    save_json("fig2_dre_cost.json", rows)
+    # scaling check: kulsif learn should grow superlinearly, kmeans ~linear
+    if len(rows) >= 3:
+        r0, r1 = rows[0], rows[-1]
+        growth = r1["n"] / r0["n"]
+        ku_g = r1["kulsif_learn_s"] / max(r0["kulsif_learn_s"], 1e-9)
+        km_g = r1["kmeans1_learn_s"] / max(r0["kmeans1_learn_s"], 1e-9)
+        print(f"\nn grew {growth:.0f}x: kulsif learn {ku_g:.1f}x, "
+              f"kmeans learn {km_g:.1f}x  (paper: exponential vs linear)")
+
+
+if __name__ == "__main__":
+    main()

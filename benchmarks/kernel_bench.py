@@ -1,0 +1,73 @@
+"""Pallas-kernel microbenchmarks (interpret mode on CPU: correctness-scale
+numbers; the BlockSpec tiling is the TPU deployment artifact).
+
+Compares each kernel wrapper against its jnp oracle at FD-realistic sizes.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json, timeit
+from repro.kernels.distill_kl import ops as kl_ops, ref as kl_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.kmeans_dist import ops as kd_ops, ref as kd_ref
+from repro.kernels.kulsif_rbf import ops as rbf_ops, ref as rbf_ref
+
+
+def run(quick=False):
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    t, d, c = (1024, 50, 10) if quick else (8192, 50, 10)
+    x = jax.random.normal(key, (t, d))
+    cent = jax.random.normal(jax.random.fold_in(key, 1), (c, d))
+    jit_ref = jax.jit(lambda a, b: kd_ref.min_dist_and_mask(a, b, 7.0))
+    t_k = timeit(lambda: kd_ops.min_dist_and_mask(x, cent, 7.0))
+    t_r = timeit(lambda: jit_ref(x, cent))
+    out["kmeans_dist"] = {"pallas_s": t_k, "ref_s": t_r, "t": t, "d": d, "c": c}
+    emit("kernel/kmeans_dist", t_k * 1e6, f"ref={t_r*1e6:.1f}us")
+
+    n, m = (512, 512) if quick else (2048, 1024)
+    a = jax.random.normal(key, (n, d))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (m, d))
+    jit_ref = jax.jit(lambda p, q: rbf_ref.rbf_matrix(p, q, 3.0))
+    t_k = timeit(lambda: rbf_ops.rbf_matrix(a, b, 3.0))
+    t_r = timeit(lambda: jit_ref(a, b))
+    out["kulsif_rbf"] = {"pallas_s": t_k, "ref_s": t_r, "n": n, "m": m}
+    emit("kernel/kulsif_rbf", t_k * 1e6, f"ref={t_r*1e6:.1f}us")
+
+    nn, k = (2048, 10) if quick else (16384, 10)
+    s = jax.random.normal(key, (nn, k)) * 3
+    tt = jax.random.normal(jax.random.fold_in(key, 3), (nn, k)) * 3
+    jit_ref = jax.jit(lambda p, q: kl_ref.kd_kl_per_sample(p, q, 3.0))
+    t_k = timeit(lambda: kl_ops.kd_kl_per_sample(s, tt, 3.0))
+    t_r = timeit(lambda: jit_ref(s, tt))
+    out["distill_kl"] = {"pallas_s": t_k, "ref_s": t_r, "n": nn, "k": k}
+    emit("kernel/distill_kl", t_k * 1e6, f"ref={t_r*1e6:.1f}us")
+
+    B, N, S, H = (1, 2, 256, 64) if quick else (1, 4, 1024, 64)
+    q = jax.random.normal(key, (B, N, S, H))
+    kk = jax.random.normal(jax.random.fold_in(key, 4), (B, N, S, H))
+    v = jax.random.normal(jax.random.fold_in(key, 5), (B, N, S, H))
+    jit_ref = jax.jit(lambda a1, a2, a3: fa_ref.attention(a1, a2, a3))
+    t_k = timeit(lambda: fa_ops.attention(q, kk, v, block_q=128, block_k=128),
+                 iters=3)
+    t_r = timeit(lambda: jit_ref(q, kk, v), iters=3)
+    out["flash_attention"] = {"pallas_s": t_k, "ref_s": t_r,
+                              "B": B, "N": N, "S": S, "H": H}
+    emit("kernel/flash_attention", t_k * 1e6, f"ref={t_r*1e6:.1f}us")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    save_json("kernel_bench.json", run(quick=args.quick))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def render(path: str, title: str) -> str:
+    rs = json.load(open(path))
+    lines = [f"### {title}", "",
+             "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+             "| bottleneck | useful-FLOPs | peak+temp GB/dev | compile s | note |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rs:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — "
+                         f"| SKIP: {r['skipped']} |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — "
+                         f"| ERROR: {r['error'][:60]} |")
+            continue
+        mem = ((r["memory"]["peak_bytes"] or 0) + (r["memory"]["temp_bytes"] or 0)) / 1e9
+        note = f"window={r['window_override']}" if r.get("window_override") else ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} "
+            f"| {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} "
+            f"| **{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {mem:.1f} | {r.get('compile_s','')} | {note} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--title", default="Roofline")
+    a = ap.parse_args()
+    print(render(a.path, a.title))

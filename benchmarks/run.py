@@ -1,0 +1,61 @@
+"""Benchmark registry — one entry per paper table/figure.
+
+``python -m benchmarks.run``          quick pass (CI-scale, CPU-friendly)
+``python -m benchmarks.run --full``   paper-scale sizes
+
+Prints ``name,us_per_call,derived`` CSV rows as each benchmark emits them.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma list: table3,fig2,table4,fig5,kernels")
+    args = ap.parse_args(argv)
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig2_dre_cost, fig5_sweeps, kernel_bench,
+                            table3_accuracy, table4_complexity)
+
+    jobs = [
+        ("kernels", lambda: kernel_bench.run(quick=quick)),
+        ("fig2", lambda: fig2_dre_cost.run(
+            sizes=(256, 512, 1024) if quick else (256, 512, 1024, 2048, 4096))),
+        ("table4", lambda: table4_complexity.run(quick=quick)),
+        ("table3", lambda: table3_accuracy.run(
+            rounds=3 if quick else 6,
+            clients=5 if quick else 10,
+            n_train=1500 if quick else 4000,
+            n_test=400 if quick else 800,
+            methods=(["indlearn", "fedmd", "fkd", "selective-fd", "edgefd"]
+                     if quick else table3_accuracy.METHODS),
+            scenarios=(["strong", "iid"] if quick else
+                       table3_accuracy.SCENARIOS))),
+        ("fig5", lambda: (fig5_sweeps.threshold_sweep(
+                              rounds=3 if quick else 5,
+                              n_train=1500 if quick else 4000,
+                              n_test=400 if quick else 800),
+                          fig5_sweeps.proxy_sweep(
+                              rounds=3 if quick else 5,
+                              n_train=1500 if quick else 4000,
+                              n_test=400 if quick else 800))),
+    ]
+    print("name,us_per_call,derived")
+    for name, job in jobs:
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        job()
+        print(f"bench/{name}/total,{(time.perf_counter()-t0)*1e6:.0f},done",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

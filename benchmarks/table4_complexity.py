@@ -1,0 +1,83 @@
+"""Table IV: measured scaling exponents of both DREs vs the stated bounds.
+
+Fits log-log slopes of learn/estimate wall time against each parameter
+(n private samples, t test samples, c centroids) and checks them against
+the complexity table: KuLSIF learn ∈ O(m³ + m²d + nmd), KMeans learn
+O(k·n·c·d) (linear in n), estimate O(t·c·d) (linear in t).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, save_json, timeit
+from repro.core.dre import KMeansDRE, KuLSIFDRE
+
+D = 50
+
+
+def _slope(xs, ys):
+    xs, ys = np.log(np.asarray(xs, float)), np.log(np.maximum(ys, 1e-9))
+    return float(np.polyfit(xs, ys, 1)[0])
+
+
+def run(quick=False):
+    key = jax.random.PRNGKey(0)
+    ns = [256, 512, 1024] if quick else [256, 512, 1024, 2048]
+    out = {}
+
+    # KMeans learn vs n (expect slope ≈ 1)
+    ts = []
+    for n in ns:
+        x = jax.random.normal(key, (n, D))
+        km = KMeansDRE(num_centroids=4)
+        ts.append(timeit(lambda: km.learn(jax.random.fold_in(key, 1), x).centroids,
+                         iters=3))
+    out["kmeans_learn_vs_n_slope"] = _slope(ns, ts)
+
+    # KMeans estimate vs t (expect ≈ 1)
+    x = jax.random.normal(key, (1024, D))
+    km = KMeansDRE(num_centroids=4).learn(jax.random.fold_in(key, 1), x)
+    tests = ns
+    ts = []
+    for t in tests:
+        q = jax.random.normal(jax.random.fold_in(key, 2), (t, D))
+        ts.append(timeit(lambda: km.distances(q), iters=3))
+    out["kmeans_est_vs_t_slope"] = _slope(tests, ts)
+
+    # KuLSIF learn vs m (aux samples; expect > 1.5 — m³ solve + m² kernel)
+    ts = []
+    for m in ns:
+        ku = KuLSIFDRE(num_aux=m, sigma=3.0)
+        ts.append(timeit(lambda: ku.learn(jax.random.fold_in(key, 3), x).alpha,
+                         iters=3))
+    out["kulsif_learn_vs_m_slope"] = _slope(ns, ts)
+
+    # KuLSIF estimate vs t (expect ≈ 1, but with (n+m)·d constant ≫ c·d)
+    ku = KuLSIFDRE(num_aux=1024, sigma=3.0).learn(jax.random.fold_in(key, 3), x)
+    ts_ku, ts_km = [], []
+    for t in tests:
+        q = jax.random.normal(jax.random.fold_in(key, 4), (t, D))
+        ts_ku.append(timeit(lambda: ku.estimate(q), iters=3))
+        ts_km.append(timeit(lambda: km.distances(q), iters=3))
+    out["kulsif_est_vs_t_slope"] = _slope(tests, ts_ku)
+    out["est_time_ratio_kulsif_over_kmeans"] = float(np.mean(
+        np.asarray(ts_ku) / np.asarray(ts_km)))
+
+    for k, v in out.items():
+        emit(f"table4/{k}", 0.0, f"{v:.2f}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    out = run(quick=args.quick)
+    save_json("table4_complexity.json", out)
+
+
+if __name__ == "__main__":
+    main()

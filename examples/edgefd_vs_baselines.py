@@ -1,0 +1,21 @@
+"""Scenario: reproduce the paper's headline comparison (Table III, strong
+non-IID) — EdgeFD vs the unfiltered ensemble (FedMD) vs no collaboration.
+
+Also prints the round-by-round ID fraction: the client filter admits
+mostly own-class proxy samples, which is exactly why the aggregated
+teacher stays clean under extreme heterogeneity.
+"""
+from repro.common.types import FedConfig
+from repro.fed import simulator
+
+ROUNDS = 6
+
+for method in ("indlearn", "fedmd", "edgefd"):
+    cfg = FedConfig(num_clients=5, rounds=ROUNDS, method=method,
+                    scenario="strong", proxy_batch=300, lr=1e-2)
+    res = simulator.run(cfg, "mnist_feat", n_train=2000, n_test=500)
+    accs = " ".join(f"{r.mean_acc:.3f}" for r in res.rounds)
+    idf = res.rounds[-1].id_fraction
+    print(f"{method:10s} | accs: {accs} | final id_frac={idf:.2f}")
+
+print("\nExpected ordering (paper Table III): edgefd > fedmd >> indlearn")

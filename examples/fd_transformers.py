@@ -1,0 +1,47 @@
+"""Scenario: EdgeFD across TRANSFORMER clients — the paper's technique as a
+first-class trainer for the production backbones (core/fd_trainer.py).
+
+Three reduced granite-8b clients hold disjoint vocab bands (the LM analogue
+of strong non-IID). Each round: proxy logits → two-stage KMeans-DRE filter
+on pooled embedding features → masked-mean teacher → CE + KL step.
+Optionally privatizes the proxy tokens' feature space (core/privacy.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core import fd_trainer as FD
+from repro.core.kmeans import kmeans_fit, min_dist_to_centroids
+from repro.models import transformer as T
+from repro.optim.optimizers import sgd
+
+cfg = reduced(get_arch("granite-8b"))
+key = jax.random.PRNGKey(0)
+N_CLIENTS, B, S, ROUNDS = 3, 4, 24, 3
+opt = sgd(5e-3)
+
+states, cents, thrs, batches = [], [], [], []
+for c in range(N_CLIENTS):
+    kc = jax.random.fold_in(key, c)
+    params = T.init_params(cfg, kc)
+    states.append((params, opt.init(params)))
+    lo, hi = c * cfg.vocab_size // 3, (c + 1) * cfg.vocab_size // 3
+    toks = jax.random.randint(kc, (B, S), lo, hi)
+    batches.append({"tokens": toks, "labels": toks})
+    feats = FD.proxy_features(params, cfg, toks)
+    res = kmeans_fit(kc, feats, 1)
+    cents.append(res.centroids)
+    thrs.append(float(jnp.max(min_dist_to_centroids(feats, res.centroids))) * 1.5)
+
+proxy = jnp.concatenate([b["tokens"][:1] for b in batches])
+owner = jnp.arange(N_CLIENTS, dtype=jnp.int32)
+
+for r in range(ROUNDS):
+    states, metrics, id_frac = FD.fd_round_local(
+        cfg, opt, states, batches, proxy, owner, cents, thrs)
+    losses = " ".join(f"{float(m['loss']):.3f}" for m in metrics)
+    print(f"round {r}: losses [{losses}]  id_frac={id_frac:.2f}")
+
+print("\nEach client distilled only in-distribution proxy knowledge — "
+      "the paper's protocol, running on transformer backbones.")

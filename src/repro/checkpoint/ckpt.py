@@ -1,0 +1,68 @@
+"""Flat-pytree checkpointing to .npz with sharding-aware restore.
+
+Leaves are addressed by '/'-joined pytree paths. On restore, arrays are
+device_put with the provided shardings (pytree of NamedSharding or None),
+so a checkpoint written on one mesh can be reloaded onto another — resharding
+happens at restore time.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like_tree,
+                       shardings=None) -> Any:
+    """Restore into the structure of ``like_tree``; dtype/shape-checked."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    shard_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
+                    if shardings is not None else [None] * len(leaves_p))
+    out = []
+    for (pth, like), sh in zip(leaves_p, shard_leaves):
+        key = "/".join(_path_str(p) for p in pth)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(f"shape mismatch at {key}: ckpt {arr.shape} vs "
+                             f"model {like.shape}")
+        arr = arr.astype(like.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

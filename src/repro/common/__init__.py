@@ -1,0 +1,11 @@
+from repro.common.pytree import (
+    init_dense,
+    init_embedding,
+    init_conv,
+    param_count,
+    param_bytes,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+)
+from repro.common.types import ArchConfig, InputShape, MoEConfig, AttentionKind

@@ -1,0 +1,63 @@
+"""Parameter-pytree helpers: initialization and arithmetic.
+
+The framework uses plain nested-dict pytrees for parameters (no flax/haiku).
+Modules are (init_fn, apply_fn) pairs; these helpers keep initializer code
+uniform and dtype-correct.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32, bias: bool = False,
+               scale: float | None = None):
+    """Lecun-normal dense init; returns {'w': (d_in, d_out)[, 'b': (d_out,)]}."""
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def init_conv(key, c_in: int, c_out: int, k: int, dtype=jnp.float32):
+    """He-normal conv init; returns {'w': (k,k,c_in,c_out), 'b': (c_out,)}."""
+    fan_in = c_in * k * k
+    std = math.sqrt(2.0 / fan_in)
+    return {
+        "w": (jax.random.normal(key, (k, k, c_in, c_out)) * std).astype(dtype),
+        "b": jnp.zeros((c_out,), dtype),
+    }
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def split_keys(key, names: Sequence[str]):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))

@@ -1,0 +1,16 @@
+"""granite-moe-1b-a400m [moe] — 32 experts, top-8. [hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+from repro.common.types import ArchConfig, AttentionKind, MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    moe=MoEConfig(num_experts=32, top_k=8),
+    attention=AttentionKind.FULL,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

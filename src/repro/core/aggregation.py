@@ -1,0 +1,55 @@
+"""Server-side aggregation (Algorithm 1 line 15) — masked mean of ID logits.
+
+EdgeFD's server does exactly one thing: average the ID predictions each
+client uploaded. No filtering, no teacher model. On the production mesh this
+is a psum over the ``data`` axis (DESIGN.md §3) instead of a gather at a hub.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_mean_logits(logits, mask, *, temperature_sharpen: Optional[float] = None):
+    """logits: (C, t, K) per-client proxy logits; mask: (C, t) ID decisions.
+
+    Returns (teacher (t, K), valid (t,) bool). Samples where no client is ID
+    get a zero teacher and valid=False — the distillation loss masks them.
+    DS-FL-style temperature sharpening (entropy reduction) is optional.
+    """
+    m = mask.astype(jnp.float32)[..., None]                  # (C, t, 1)
+    s = jnp.sum(logits.astype(jnp.float32) * m, axis=0)      # (t, K)
+    cnt = jnp.sum(m, axis=0)                                 # (t, 1)
+    teacher = s / jnp.maximum(cnt, 1.0)
+    valid = cnt[..., 0] > 0.0
+    if temperature_sharpen:
+        probs = jax.nn.softmax(teacher / temperature_sharpen, axis=-1)
+        teacher = jnp.log(jnp.maximum(probs, 1e-12))         # sharpened logits
+    return teacher, valid
+
+
+def masked_mean_logits_psum(local_logits, local_mask, axis_name: str = "data"):
+    """Collective form for the sharded FD runtime: each mesh rank holds one
+    client's logits; the masked mean is one all-reduce (psum of (Σ m·y, Σ m))
+    over the federation axis. Semantically identical to masked_mean_logits.
+    """
+    m = local_mask.astype(jnp.float32)[..., None]
+    num = jax.lax.psum(local_logits.astype(jnp.float32) * m, axis_name)
+    den = jax.lax.psum(m, axis_name)
+    teacher = num / jnp.maximum(den, 1.0)
+    return teacher, den[..., 0] > 0.0
+
+
+def classwise_mean_logits(logits, labels, num_classes: int):
+    """FKD/PLS-style data-free aggregation: per-label mean logits.
+
+    logits: (n, K) local logits on *private* data; labels: (n,).
+    Returns (K_classes, K) matrix of mean logits per class (zero rows for
+    absent classes) and per-class counts.
+    """
+    one_hot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)  # (n, C)
+    sums = one_hot.T @ logits.astype(jnp.float32)                     # (C, K)
+    cnt = jnp.sum(one_hot, axis=0)[:, None]
+    return sums / jnp.maximum(cnt, 1.0), cnt[:, 0]

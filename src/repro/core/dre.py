@@ -1,0 +1,140 @@
+"""Density-ratio estimators: the paper's KMeans-DRE and the KuLSIF-DRE
+baseline it replaces (Kanamori et al. 2012, as used by Selective-FD).
+
+Both expose the paper's two-phase API:
+    learn(private_data)    -> fitted state
+    estimate(test_data)    -> per-sample score (higher = more in-distribution)
+    is_id(test_data)       -> boolean ID mask at the configured threshold
+
+KMeans-DRE (paper §III): score = −distance to nearest private-data centroid;
+ID iff distance ≤ T^ID.  Complexity: learn O(k·n·c·d), estimate O(t·c·d).
+
+KuLSIF-DRE (paper §V-B): kernel unconstrained least-squares importance
+fitting.  Ratio r(x) = Σ_j α_j K(x, x'_j) + Σ_i β K(x, x_i) with the
+analytic KuLSIF solution  α = (K11/m + λ I)^{-1} · (−K12 1/(λ n m)) …
+following the operational form used in Selective-FD's released code:
+learn solves the m×m system; estimate evaluates kernels of the test
+points against both auxiliary and private samples.  Complexity:
+learn O(m³ + m²d + nmd), estimate O(t(n+m)d) — Table IV.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans_fit, min_dist_to_centroids, pairwise_sq_dists
+
+
+# ---------------------------------------------------------------------------
+# KMeans-DRE (the paper's contribution)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KMeansDRE:
+    """The paper's estimator. One centroid for strong non-IID; one per
+    label for weak non-IID / IID (paper §IV-A)."""
+    num_centroids: int = 1
+    threshold: Optional[float] = None   # None => calibrate at learn()
+    calibration_q: float = 0.95         # quantile of private distances
+    max_iter: int = 50
+
+    centroids: Optional[jax.Array] = None
+
+    def learn(self, key, x) -> "KMeansDRE":
+        """Fit centroids; if threshold is None, set T^ID to the
+        ``calibration_q`` quantile of the *private* data's own distances —
+        the principled realisation of the paper's 'client-specific
+        predefined thresholds' (§IV-B)."""
+        flat = x.reshape(x.shape[0], -1)
+        res = kmeans_fit(key, flat, self.num_centroids, self.max_iter)
+        thr = self.threshold
+        if thr is None:
+            d = min_dist_to_centroids(flat, res.centroids)
+            thr = float(jnp.quantile(d, self.calibration_q))
+        return dataclasses.replace(self, centroids=res.centroids, threshold=thr)
+
+    def distances(self, t):
+        assert self.centroids is not None, "call learn() first"
+        return min_dist_to_centroids(t.reshape(t.shape[0], -1), self.centroids)
+
+    def estimate(self, t):
+        """Density-ratio proxy: monotone in −distance (paper uses the raw
+        distance against T^ID; we expose −d so 'higher = more ID')."""
+        return -self.distances(t)
+
+    def is_id(self, t):
+        return self.distances(t) <= self.threshold
+
+
+# ---------------------------------------------------------------------------
+# KuLSIF-DRE (Selective-FD's estimator — the baseline)
+# ---------------------------------------------------------------------------
+
+def rbf_kernel(a, b, sigma: float):
+    """K(a,b) = exp(−‖a−b‖²/(2σ²)); a:(n,d) b:(m,d) -> (n,m)."""
+    d2 = pairwise_sq_dists(a, b)
+    return jnp.exp(-d2 / (2.0 * sigma * sigma))
+
+
+@partial(jax.jit, static_argnames=())
+def _kulsif_learn(aux, private, sigma, lam):
+    m = aux.shape[0]
+    n = private.shape[0]
+    k11 = rbf_kernel(aux, aux, sigma)                  # O(m² d) — Table IV
+    k12 = rbf_kernel(aux, private, sigma)              # O(n m d)
+    a = k11 / m + lam * jnp.eye(m, dtype=k11.dtype)
+    b = -jnp.sum(k12, axis=1) / (lam * n * m)
+    alpha = jnp.linalg.solve(a, b)                     # O(m³)
+    return alpha
+
+
+@dataclasses.dataclass
+class KuLSIFDRE:
+    """Kernel unconstrained least-squares importance fitting.
+
+    Requires locally generated auxiliary (denominator) samples — the paper
+    highlights this as an extra burden of statistical DREs; we synthesize
+    them uniformly over the private data's bounding box (the 'dataset
+    extrema' tuning factor mentioned in §II).
+    """
+    sigma: float = 1.0
+    lam: float = 0.1
+    num_aux: int = 256
+    threshold: float = 1.0     # on the estimated ratio
+
+    alpha: Optional[jax.Array] = None
+    aux: Optional[jax.Array] = None
+    private: Optional[jax.Array] = None
+
+    def learn(self, key, x) -> "KuLSIFDRE":
+        x = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        lo = jnp.min(x, axis=0)
+        hi = jnp.max(x, axis=0)
+        aux = jax.random.uniform(key, (self.num_aux, x.shape[1]),
+                                 minval=lo, maxval=hi)
+        alpha = _kulsif_learn(aux, x, jnp.float32(self.sigma), jnp.float32(self.lam))
+        return dataclasses.replace(self, alpha=alpha, aux=aux, private=x)
+
+    def estimate(self, t):
+        """r̂(t) — density ratio p_private/p_aux (higher = more ID)."""
+        assert self.alpha is not None, "call learn() first"
+        t = t.reshape(t.shape[0], -1).astype(jnp.float32)
+        k_ta = rbf_kernel(t, self.aux, self.sigma)         # O(t·m·d)
+        k_tp = rbf_kernel(t, self.private, self.sigma)     # O(t·n·d)
+        n = self.private.shape[0]
+        return k_ta @ self.alpha + jnp.sum(k_tp, axis=1) / (self.lam * n)
+
+    def is_id(self, t):
+        return self.estimate(t) >= self.threshold
+
+
+def make_dre(kind: str, **kw):
+    if kind == "kmeans":
+        return KMeansDRE(**kw)
+    if kind == "kulsif":
+        return KuLSIFDRE(**kw)
+    raise ValueError(f"unknown DRE kind {kind!r}")

@@ -1,0 +1,137 @@
+"""EdgeFD as a first-class trainer for the large-architecture backbones.
+
+The paper's protocol at production scale (DESIGN.md §3): homogeneous-family
+clients are ranks on the ``data`` mesh axis; each holds a private token
+shard and a KMeans-DRE fitted on its private feature distribution. Per
+round, every rank:
+
+  1. predicts logits on the broadcast proxy token batch,
+  2. filters them with the two-stage mask (owner-provenance ∪ distance test
+     on pooled embedding features — `transformer.features`),
+  3. contributes to the ensemble teacher via ONE psum
+     (`masked_mean_logits_psum`) — no hub, no server,
+  4. takes a combined gradient step:  CE(private) + λ·T²·KL(student ∥ ȳ).
+
+``make_fd_train_step`` returns a pjit-able step; ``fd_round_local`` is the
+single-process (vmap-over-clients) variant used in tests/examples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ArchConfig
+from repro.core.aggregation import masked_mean_logits_psum
+from repro.core.distill import kd_kl_loss
+from repro.core.filtering import two_stage_filter
+from repro.models import transformer as T
+
+
+def proxy_features(params, cfg: ArchConfig, proxy_tokens):
+    """The filter's feature space for token data: pooled input embeddings
+    (model-independent across heterogeneous clients; paper §V-C)."""
+    return T.features(params, cfg, proxy_tokens)
+
+
+def fd_loss(params, cfg: ArchConfig, private_batch, proxy_tokens, teacher,
+            teacher_weight, *, temperature: float = 2.0,
+            distill_weight: float = 1.0, remat: bool = False):
+    """Combined objective: local CE + weighted distillation KL."""
+    ce, metrics = T.train_loss(params, cfg, private_batch, remat=remat)
+    student_logits, _ = T.forward(params, cfg, proxy_tokens, remat=remat)
+    # distill on the LAST position of each proxy sequence (the FD 'sample
+    # logit' for LM clients is the next-token distribution)
+    kl = kd_kl_loss(student_logits[:, -1], teacher[:, -1] if teacher.ndim == 3
+                    else teacher, temperature, teacher_weight)
+    loss = ce + distill_weight * kl
+    return loss, {**metrics, "kl": kl, "ce_local": ce}
+
+
+def make_fd_train_step(cfg: ArchConfig, optimizer, *, axis_name: str = "data",
+                       temperature: float = 2.0, distill_weight: float = 1.0,
+                       threshold: Optional[float] = None, remat: bool = False):
+    """Mesh-collective FD round for shard_map/pjit execution.
+
+    Each rank supplies its own (params, opt_state, private_batch, centroids,
+    threshold); proxy_tokens/proxy_owner are replicated. Returns the updated
+    client state; the teacher psum happens inside.
+    """
+
+    def step(params, opt_state, private_batch, proxy_tokens, proxy_owner,
+             centroids, thr, client_id):
+        # --- filter (lines 21–24 of Algorithm 1) -------------------------
+        feats = proxy_features(params, cfg, proxy_tokens)
+
+        class _DRE:  # minimal duck-typed DRE over the provided centroids
+            threshold = thr
+
+            @staticmethod
+            def distances(x):
+                from repro.core.kmeans import min_dist_to_centroids
+                return min_dist_to_centroids(x, centroids)
+
+        fs = two_stage_filter(_DRE, feats, proxy_owner, client_id)
+        logits, _ = T.forward(params, cfg, proxy_tokens, remat=remat)
+        sample_logits = logits[:, -1]
+        # --- one-psum aggregation (line 15) ------------------------------
+        teacher, valid = masked_mean_logits_psum(sample_logits, fs.mask,
+                                                 axis_name)
+        w = valid.astype(jnp.float32)
+        # --- local CE + distill gradient step (lines 40–41) --------------
+        (loss, metrics), grads = jax.value_and_grad(
+            fd_loss, has_aux=True)(params, cfg, private_batch, proxy_tokens,
+                                   teacher, w, temperature=temperature,
+                                   distill_weight=distill_weight, remat=remat)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(jnp.add, params, updates)
+        metrics = {**metrics, "loss": loss,
+                   "id_fraction": jnp.mean(fs.mask.astype(jnp.float32))}
+        return params, opt_state, metrics
+
+    return step
+
+
+def fd_round_local(cfg: ArchConfig, optimizer, client_states, private_batches,
+                   proxy_tokens, proxy_owner, centroids_list, thresholds,
+                   **kw):
+    """Single-process reference: iterate clients, aggregate like the hub.
+
+    client_states: list of (params, opt_state). Returns updated states +
+    per-client metrics. Semantically identical to the psum step (tested).
+    """
+    from repro.core.aggregation import masked_mean_logits
+
+    logits_all, masks = [], []
+    for cid, (params, _) in enumerate(client_states):
+        feats = proxy_features(params, cfg, proxy_tokens)
+
+        class _DRE:
+            threshold = thresholds[cid]
+            _c = centroids_list[cid]
+
+            @staticmethod
+            def distances(x, _c=None):
+                from repro.core.kmeans import min_dist_to_centroids
+                return min_dist_to_centroids(x, centroids_list[cid])
+
+        fs = two_stage_filter(_DRE, feats, proxy_owner, cid)
+        lg, _ = T.forward(params, cfg, proxy_tokens)
+        logits_all.append(lg[:, -1])
+        masks.append(fs.mask)
+    teacher, valid = masked_mean_logits(jnp.stack(logits_all),
+                                        jnp.stack(masks))
+    w = valid.astype(jnp.float32)
+
+    new_states, all_metrics = [], []
+    for cid, (params, opt_state) in enumerate(client_states):
+        (loss, metrics), grads = jax.value_and_grad(
+            fd_loss, has_aux=True)(params, cfg, private_batches[cid],
+                                   proxy_tokens, teacher, w, **kw)
+        upd, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(jnp.add, params, upd)
+        new_states.append((params, opt_state))
+        all_metrics.append({**metrics, "loss": loss})
+    return new_states, all_metrics, float(jnp.stack(masks).mean())

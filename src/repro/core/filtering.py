@@ -1,0 +1,60 @@
+"""Two-stage client-side filtering (Algorithm 1, CLIENTFILTER, lines 28–37).
+
+A proxy sample's logits are in-distribution (ID) for client c iff
+  stage 1: the sample originated from c's own private data
+           (exact-membership test — proxy provenance is known, each client
+           contributed its proxy subset), OR
+  stage 2: KMeans-DRE distance to c's private centroids ≤ T^ID.
+
+Everything is fixed-shape and vectorised: the filter returns a boolean mask
+over the round's proxy batch, never a ragged set — masked aggregation on the
+server consumes it directly (eliminating Selective-FD's server-side filter
+stage, the paper's second contribution).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FilterStats(NamedTuple):
+    mask: jax.Array        # (t,) bool — ID decisions
+    stage1: jax.Array      # (t,) bool — membership hits
+    stage2: jax.Array      # (t,) bool — distance-test hits
+    distances: jax.Array   # (t,) f32 — DRE distances (diagnostics)
+
+
+def membership_mask(proxy_owner: jax.Array, client_id: int | jax.Array):
+    """Stage 1 via provenance: owner ids recorded at proxy construction."""
+    return proxy_owner == client_id
+
+
+def two_stage_filter(dre, proxy_x, proxy_owner, client_id) -> FilterStats:
+    """Full CLIENTFILTER. proxy_x: (t, ...) samples; proxy_owner: (t,) int32."""
+    stage1 = membership_mask(proxy_owner, client_id)
+    d = dre.distances(proxy_x) if hasattr(dre, "distances") else -dre.estimate(proxy_x)
+    if hasattr(dre, "distances"):
+        stage2 = d <= dre.threshold
+    else:  # ratio-based DRE (KuLSIF): higher ratio = more ID
+        stage2 = dre.estimate(proxy_x) >= dre.threshold
+        d = -dre.estimate(proxy_x)
+    # two-stage short-circuit: stage 2 only *needed* where stage 1 missed;
+    # vectorised OR is the fixed-shape equivalent (the redundancy the paper
+    # removes is the *server-side* pass, not this union)
+    mask = stage1 | stage2
+    return FilterStats(mask=mask, stage1=stage1, stage2=stage2, distances=d)
+
+
+def server_entropy_filter(logits, mask, max_entropy_frac: float = 0.75):
+    """Selective-FD's *server-side* ambiguity filter (baseline only).
+
+    Drops client logits whose predictive entropy exceeds a fraction of
+    log(num_classes). EdgeFD's claim is that this stage is unnecessary once
+    client filtering is robust — the ablation toggles this on/off.
+    logits: (C, t, K); mask: (C, t) bool. Returns tightened mask."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    ent = -jnp.sum(probs * jnp.log(jnp.maximum(probs, 1e-12)), axis=-1)
+    max_ent = jnp.log(logits.shape[-1]) * max_entropy_frac
+    return mask & (ent <= max_ent)

@@ -1,0 +1,92 @@
+"""KMeans in pure JAX: k-means++ seeding + Lloyd iterations via lax.scan.
+
+The paper's KMeans-DRE learns centroid positions from a client's private
+data (Algorithm 1 line 3). Time O(k·n·c·d), space O(c·d + n) — Table IV.
+
+The assignment step is the compute hot-spot; ``repro.kernels.kmeans_dist``
+provides the Pallas TPU kernel for it (matmul-form distances, fused argmin).
+This module is the framework-level API and the jnp reference path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array     # (c, d)
+    assignments: jax.Array   # (n,) int32
+    inertia: jax.Array       # scalar — sum of squared distances
+    n_iter: jax.Array        # iterations executed
+
+
+def pairwise_sq_dists(x, c):
+    """‖x−c‖² via the matmul form (MXU-friendly): x:(n,d), c:(k,d) -> (n,k)."""
+    x2 = jnp.sum(jnp.square(x), axis=-1, keepdims=True)        # (n,1)
+    c2 = jnp.sum(jnp.square(c), axis=-1)                       # (k,)
+    cross = x @ c.T                                            # (n,k)
+    return jnp.maximum(x2 - 2.0 * cross + c2[None, :], 0.0)
+
+
+def kmeans_plus_plus(key, x, k: int):
+    """k-means++ seeding (faithful to sklearn's default, which the paper uses)."""
+    n = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    centroids = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+
+    def body(carry, i):
+        centroids, key, min_d2 = carry
+        d2 = jnp.sum(jnp.square(x - centroids[i - 1]), axis=-1)
+        min_d2 = jnp.minimum(min_d2, d2)
+        key, sub = jax.random.split(key)
+        probs = min_d2 / jnp.maximum(jnp.sum(min_d2), 1e-12)
+        nxt = jax.random.choice(sub, n, p=probs)
+        centroids = centroids.at[i].set(x[nxt])
+        return (centroids, key, min_d2), None
+
+    if k > 1:
+        init_d2 = jnp.full((n,), jnp.inf, x.dtype)
+        (centroids, _, _), _ = jax.lax.scan(
+            body, (centroids, key, init_d2), jnp.arange(1, k))
+    return centroids
+
+
+@partial(jax.jit, static_argnames=("k", "max_iter"))
+def kmeans_fit(key, x, k: int, max_iter: int = 50, tol: float = 1e-6):
+    """Lloyd's algorithm. x: (n, d) -> KMeansResult. Runs a fixed-shape scan
+    with a convergence flag (jit-stable; converged iterations are no-ops)."""
+    x = x.astype(jnp.float32)
+    n, d = x.shape
+    init = kmeans_plus_plus(key, x, k)
+
+    def step(carry, _):
+        cents, done, iters = carry
+        d2 = pairwise_sq_dists(x, cents)
+        assign = jnp.argmin(d2, axis=-1)
+        one_hot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+        counts = jnp.sum(one_hot, axis=0)                       # (k,)
+        sums = one_hot.T @ x                                    # (k, d)
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0),
+                        cents)
+        shift = jnp.sum(jnp.square(new - cents))
+        new_done = done | (shift < tol)
+        cents = jnp.where(done, cents, new)
+        iters = iters + jnp.where(done, 0, 1)
+        return (cents, new_done, iters), None
+
+    (cents, _, iters), _ = jax.lax.scan(
+        step, (init, jnp.bool_(False), jnp.int32(0)), None, length=max_iter)
+    d2 = pairwise_sq_dists(x, cents)
+    assign = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    inertia = jnp.sum(jnp.min(d2, axis=-1))
+    return KMeansResult(cents, assign, inertia, iters)
+
+
+def min_dist_to_centroids(x, centroids):
+    """Euclidean distance of each row of x to its nearest centroid."""
+    d2 = pairwise_sq_dists(x.astype(jnp.float32), centroids.astype(jnp.float32))
+    return jnp.sqrt(jnp.min(d2, axis=-1))

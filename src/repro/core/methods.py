@@ -1,0 +1,62 @@
+"""The seven FD methods of Table III behind one interface.
+
+A Method bundles the three policy choices the paper varies:
+  * client_filter  — which proxy logits a client uploads (EdgeFD's KMeans-DRE
+                     two-stage filter, Selective-FD's KuLSIF filter, or none);
+  * server_filter  — optional server-side tightening (Selective-FD only);
+  * aggregate      — how the server fuses uploaded logits into a teacher;
+  * data_free      — FKD / PLS exchange class-wise mean logits instead of
+                     per-sample proxy logits (no proxy data at all).
+
+`repro.core.protocol` drives Algorithm 1 generically over a Method.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.core import aggregation, filtering
+from repro.core.dre import KMeansDRE, KuLSIFDRE
+
+
+@dataclasses.dataclass(frozen=True)
+class Method:
+    name: str
+    client_filter: str = "none"       # none | kmeans | kulsif
+    server_filter: bool = False       # Selective-FD entropy filter
+    sharpen: Optional[float] = None   # DS-FL ERA temperature
+    data_free: bool = False           # FKD / PLS
+    count_weighted: bool = False      # PLS: weight class means by counts
+    distill_loss: str = "kl"          # kl | mse
+
+    def make_dre(self, *, num_centroids: int, threshold: Optional[float],
+                 kulsif_threshold: float = 0.05, num_aux: int = 256,
+                 sigma: float = 4.0):
+        if self.client_filter == "kmeans":
+            return KMeansDRE(num_centroids=num_centroids, threshold=threshold)
+        if self.client_filter == "kulsif":
+            return KuLSIFDRE(threshold=kulsif_threshold, num_aux=num_aux,
+                             sigma=sigma)
+        return None
+
+
+EDGEFD = Method(name="edgefd", client_filter="kmeans")
+FEDMD = Method(name="fedmd")                                   # plain ensemble
+FEDED = Method(name="feded", distill_loss="kl")                # central distill
+DSFL = Method(name="dsfl", sharpen=0.5)                        # ERA sharpening
+FKD = Method(name="fkd", data_free=True)
+PLS = Method(name="pls", data_free=True, count_weighted=True)
+SELECTIVE_FD = Method(name="selective-fd", client_filter="kulsif",
+                      server_filter=True)
+INDLEARN = Method(name="indlearn")                             # no collaboration
+
+METHODS = {m.name: m for m in
+           (EDGEFD, FEDMD, FEDED, DSFL, FKD, PLS, SELECTIVE_FD, INDLEARN)}
+
+
+def get_method(name: str) -> Method:
+    if name not in METHODS:
+        raise KeyError(f"unknown method {name!r}; known: {sorted(METHODS)}")
+    return METHODS[name]

@@ -1,0 +1,64 @@
+"""Pre-distillation privacy counter-measure (paper §V-D, listed as future
+work — implemented here as a beyond-paper feature).
+
+The Gaussian mechanism on shared proxy data: each client perturbs its proxy
+contribution with N(0, σ²) noise calibrated to an (ε, δ) budget via the
+analytic Gaussian mechanism bound  σ ≥ Δ₂ · sqrt(2 ln(1.25/δ)) / ε,
+where the L2 sensitivity Δ₂ is taken as the per-sample feature-space
+clipping norm. This trades filter/teacher quality for a reconstruction
+bound on the released proxy samples; benchmarks/fig5_sweeps-style noise
+sweeps quantify the accuracy cost.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DPParams(NamedTuple):
+    epsilon: float
+    delta: float
+    clip_norm: float
+    sigma: float        # resulting noise std
+
+
+def gaussian_sigma(epsilon: float, delta: float, clip_norm: float) -> float:
+    """Analytic Gaussian mechanism noise scale (Dwork & Roth Thm A.1)."""
+    if epsilon <= 0:
+        raise ValueError("epsilon must be positive")
+    return clip_norm * math.sqrt(2.0 * math.log(1.25 / delta)) / epsilon
+
+
+def make_dp(epsilon: float, delta: float = 1e-5,
+            clip_norm: float = 1.0) -> DPParams:
+    return DPParams(epsilon, delta, clip_norm,
+                    gaussian_sigma(epsilon, delta, clip_norm))
+
+
+def clip_samples(x, clip_norm: float):
+    """Per-sample L2 clipping in flattened feature space."""
+    flat = x.reshape(x.shape[0], -1)
+    norms = jnp.linalg.norm(flat, axis=1, keepdims=True)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12))
+    return (flat * scale).reshape(x.shape)
+
+
+def privatize_proxy(key, x, dp: DPParams):
+    """Clip + add Gaussian noise: the released proxy subset."""
+    clipped = clip_samples(jnp.asarray(x, jnp.float32), dp.clip_norm)
+    noise = dp.sigma * jax.random.normal(key, clipped.shape)
+    return clipped + noise
+
+
+def privatize_proxy_np(rng: np.random.Generator, x: np.ndarray,
+                       dp: DPParams) -> np.ndarray:
+    """NumPy variant for the data-pipeline side (proxy.build_proxy hook)."""
+    flat = x.reshape(len(x), -1).astype(np.float32)
+    norms = np.linalg.norm(flat, axis=1, keepdims=True)
+    flat = flat * np.minimum(1.0, dp.clip_norm / np.maximum(norms, 1e-12))
+    flat = flat + dp.sigma * rng.standard_normal(flat.shape).astype(np.float32)
+    return flat.reshape(x.shape)

@@ -1,0 +1,125 @@
+"""Algorithm 1 — the EdgeFD round protocol, generic over Method.
+
+``run_round`` executes one training-phase iteration (lines 12–17);
+``run_experiment`` wires data → clients → rounds → evaluation and returns
+a result record (accuracy history per client + communication accounting).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from typing import TYPE_CHECKING
+
+from repro.common.types import FedConfig
+from repro.core.methods import Method, get_method
+from repro.data.proxy import ProxyData
+
+if TYPE_CHECKING:  # avoid core <-> fed import cycle at runtime
+    from repro.fed.client import Client
+    from repro.fed.server import Server
+
+
+@dataclasses.dataclass
+class RoundLog:
+    round: int
+    mean_acc: float
+    accs: List[float]
+    local_loss: float
+    distill_loss: float
+    id_fraction: float          # fraction of (client, sample) pairs kept ID
+    bytes_up: int
+    bytes_down: int
+    wall_s: float
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    method: str
+    scenario: str
+    rounds: List[RoundLog]
+
+    @property
+    def final_acc(self) -> float:
+        return self.rounds[-1].mean_acc if self.rounds else 0.0
+
+    @property
+    def best_acc(self) -> float:
+        return max(r.mean_acc for r in self.rounds) if self.rounds else 0.0
+
+
+def run_round(r: int, clients: List["Client"], server: "Server", method: Method,
+              cfg: FedConfig, x_test, y_test) -> RoundLog:
+    t0 = time.perf_counter()
+    local_losses = [c.local_train(cfg.local_epochs, cfg.batch_size)
+                    for c in clients]
+    distill_losses = []
+    id_frac = 1.0
+
+    if method.name == "indlearn":
+        pass  # no collaboration
+    elif method.data_free:
+        means_counts = [c.classwise_means() for c in clients]
+        teacher_by_class, valid_by_class = server.aggregate_classwise(
+            means_counts, count_weighted=method.count_weighted)
+        for c in clients:
+            teacher = teacher_by_class[c.y]               # (n, K)
+            w = valid_by_class[c.y].astype(np.float32)
+            distill_losses.append(
+                c.distill(c.x, teacher, w, cfg.distill_epochs, cfg.batch_size))
+    else:
+        idx = server.select_indices(cfg.proxy_batch)      # line 13
+        px = server.proxy.x[idx]
+        powner = server.proxy.owner[idx]
+        logits, masks = [], []
+        for c in clients:                                  # lines 20–25
+            logits.append(np.asarray(c.proxy_logits(px)))
+            fs = c.filter_mask(px, powner)
+            masks.append(np.asarray(fs.mask))
+        logits = np.stack(logits)
+        masks = np.stack(masks)
+        id_frac = float(masks.mean())
+        teacher, valid = server.aggregate(                 # line 15
+            logits, masks, sharpen=method.sharpen,
+            entropy_filter=method.server_filter)
+        w = valid.astype(np.float32)
+        for c in clients:                                  # line 16 / 38–43
+            distill_losses.append(
+                c.distill(px, teacher, w, cfg.distill_epochs, cfg.batch_size))
+
+    accs = [c.evaluate(x_test, y_test) for c in clients]
+    return RoundLog(
+        round=r,
+        mean_acc=float(np.mean(accs)),
+        accs=accs,
+        local_loss=float(np.mean(local_losses)),
+        distill_loss=float(np.mean(distill_losses)) if distill_losses else 0.0,
+        id_fraction=id_frac,
+        bytes_up=server.bytes_received,
+        bytes_down=server.bytes_broadcast,
+        wall_s=time.perf_counter() - t0,
+    )
+
+
+def run_experiment(clients: List["Client"], server: "Server", method_name: str,
+                   cfg: FedConfig, x_test, y_test,
+                   progress: Optional[Callable[[RoundLog], None]] = None
+                   ) -> ExperimentResult:
+    method = get_method(method_name)
+    logs = []
+    key = jax.random.PRNGKey(cfg.seed)
+    for i, c in enumerate(clients):                        # Initialization
+        if method.client_filter != "none":
+            c.learn_dre(jax.random.fold_in(key, i))
+    for r in range(cfg.rounds):                            # Training phase
+        log = run_round(r, clients, server, method, cfg, x_test, y_test)
+        logs.append(log)
+        if progress:
+            progress(log)
+    return ExperimentResult(method=method_name, scenario=cfg.scenario,
+                            rounds=logs)

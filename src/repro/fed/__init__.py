@@ -1,0 +1,3 @@
+from repro.fed.client import Client
+from repro.fed.server import Server
+from repro.fed import simulator

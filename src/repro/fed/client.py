@@ -1,0 +1,134 @@
+"""Federated client: private data + private model + DRE + jitted steps.
+
+Each client owns a *different* architecture (system heterogeneity — Tables
+I/II), so steps are jitted per client. The filter's feature space is the
+flattened sample (paper's MNIST mode) or pre-extracted features (CIFAR10*
+mode) — both arrive here simply as ``x``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distill as D
+from repro.core.filtering import FilterStats, two_stage_filter
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+class Client:
+    def __init__(self, cid: int, apply_fn: Callable, params, opt: Optimizer,
+                 x: np.ndarray, y: np.ndarray, dre=None, *,
+                 num_classes: int = 10, temperature: float = 3.0,
+                 distill_loss: str = "kl", seed: int = 0):
+        self.cid = cid
+        self.apply_fn = apply_fn
+        self.params = params
+        self.opt = opt
+        self.opt_state = opt.init(params)
+        self.x = np.asarray(x)
+        self.y = np.asarray(y)
+        self.dre = dre
+        self.num_classes = num_classes
+        self.temperature = temperature
+        self.rng = np.random.default_rng(seed + 1000 * cid)
+        self.bytes_up = 0
+        self.bytes_down = 0
+
+        loss_kind = distill_loss
+
+        @jax.jit
+        def _train_step(params, opt_state, xb, yb):
+            def loss_fn(p):
+                logits = self.apply_fn(p, xb, True)
+                return D.ce_loss(logits, yb)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            upd, opt_state = self.opt.update(grads, opt_state, params)
+            return apply_updates(params, upd), opt_state, loss
+
+        @jax.jit
+        def _distill_step(params, opt_state, xb, teacher, w):
+            def loss_fn(p):
+                logits = self.apply_fn(p, xb, True)
+                if loss_kind == "mse":
+                    return D.kd_mse_loss(logits, teacher, w)
+                return D.kd_kl_loss(logits, teacher, self.temperature, w)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            upd, opt_state = self.opt.update(grads, opt_state, params)
+            return apply_updates(params, upd), opt_state, loss
+
+        @jax.jit
+        def _predict(params, xb):
+            return self.apply_fn(params, xb, False)
+
+        self._train_step = _train_step
+        self._distill_step = _distill_step
+        self._predict = _predict
+
+    # ----------------------------------------------------------------- init
+    def learn_dre(self, key):
+        if self.dre is not None:
+            feats = self.x.reshape(len(self.x), -1)
+            self.dre = self.dre.learn(key, jnp.asarray(feats))
+
+    # ------------------------------------------------------------- training
+    def local_train(self, epochs: int, batch_size: int) -> float:
+        n = len(self.y)
+        losses = []
+        for _ in range(epochs):
+            perm = self.rng.permutation(n)
+            for s in range(0, n - batch_size + 1, batch_size):
+                idx = perm[s:s + batch_size]
+                self.params, self.opt_state, loss = self._train_step(
+                    self.params, self.opt_state,
+                    jnp.asarray(self.x[idx]), jnp.asarray(self.y[idx]))
+                losses.append(float(loss))
+        return float(np.mean(losses)) if losses else 0.0
+
+    def distill(self, proxy_x, teacher, weight, epochs: int,
+                batch_size: int) -> float:
+        n = len(proxy_x)
+        losses = []
+        for _ in range(epochs):
+            perm = self.rng.permutation(n)
+            for s in range(0, n, batch_size):
+                idx = perm[s:s + batch_size]
+                self.params, self.opt_state, loss = self._distill_step(
+                    self.params, self.opt_state, jnp.asarray(proxy_x[idx]),
+                    jnp.asarray(teacher[idx]), jnp.asarray(weight[idx]))
+                losses.append(float(loss))
+        return float(np.mean(losses)) if losses else 0.0
+
+    # ------------------------------------------------------------ FD round
+    def proxy_logits(self, proxy_x) -> jax.Array:
+        return self._predict(self.params, jnp.asarray(proxy_x))
+
+    def filter_mask(self, proxy_x, proxy_owner) -> FilterStats:
+        if self.dre is None:   # unfiltered methods: everything is "ID"
+            t = len(proxy_x)
+            ones = jnp.ones((t,), bool)
+            return FilterStats(ones, ones, ones, jnp.zeros((t,), jnp.float32))
+        feats = jnp.asarray(np.asarray(proxy_x).reshape(len(proxy_x), -1))
+        return two_stage_filter(self.dre, feats, jnp.asarray(proxy_owner),
+                                self.cid)
+
+    def classwise_means(self):
+        """FKD/PLS: per-class mean logits over private data."""
+        from repro.core.aggregation import classwise_mean_logits
+        logits = self._predict(self.params, jnp.asarray(self.x))
+        return classwise_mean_logits(logits, jnp.asarray(self.y),
+                                     self.num_classes)
+
+    # ---------------------------------------------------------------- eval
+    def evaluate(self, x_test, y_test, batch_size: int = 512) -> float:
+        correct = 0
+        n = len(y_test)
+        for s in range(0, n, batch_size):
+            logits = self._predict(self.params, jnp.asarray(x_test[s:s + batch_size]))
+            pred = np.asarray(jnp.argmax(logits, -1))
+            correct += int((pred == np.asarray(y_test[s:s + batch_size])).sum())
+        return correct / n

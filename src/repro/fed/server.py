@@ -1,0 +1,51 @@
+"""Federated server: proxy bookkeeping + aggregation. Trusted entity that
+never trains a model (EdgeFD needs no pre-trained teacher)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation
+from repro.core.filtering import server_entropy_filter
+from repro.data.proxy import ProxyData, select_round_indices
+
+
+class Server:
+    def __init__(self, proxy: ProxyData, *, seed: int = 0):
+        self.proxy = proxy
+        self.rng = np.random.default_rng(seed + 7)
+        self.bytes_received = 0
+        self.bytes_broadcast = 0
+
+    def select_indices(self, batch: int) -> np.ndarray:
+        return select_round_indices(self.rng, self.proxy, batch)
+
+    def aggregate(self, logits, masks, *, sharpen: Optional[float] = None,
+                  entropy_filter: bool = False):
+        """logits: (C, t, K); masks: (C, t). Returns (teacher, valid)."""
+        logits = jnp.asarray(logits)
+        masks = jnp.asarray(masks)
+        if entropy_filter:  # Selective-FD baseline's extra server stage
+            masks = server_entropy_filter(logits, masks)
+        teacher, valid = aggregation.masked_mean_logits(
+            logits, masks, temperature_sharpen=sharpen)
+        # accounting: clients upload only ID logits (mask-compressed)
+        k = logits.shape[-1]
+        self.bytes_received += int(jnp.sum(masks)) * k * 4
+        self.bytes_broadcast += int(teacher.shape[0]) * k * 4
+        return np.asarray(teacher), np.asarray(valid)
+
+    def aggregate_classwise(self, means_counts, *, count_weighted: bool):
+        """FKD/PLS: fuse per-class mean logits from all clients."""
+        means = jnp.stack([m for m, _ in means_counts])     # (C, K_cls, K)
+        counts = jnp.stack([c for _, c in means_counts])    # (C, K_cls)
+        if count_weighted:
+            w = counts[..., None]
+        else:
+            w = (counts > 0).astype(jnp.float32)[..., None]
+        teacher = jnp.sum(means * w, axis=0) / jnp.maximum(jnp.sum(w, axis=0), 1.0)
+        valid = jnp.sum(counts, axis=0) > 0
+        self.bytes_received += int(np.prod(means.shape)) * 4
+        return np.asarray(teacher), np.asarray(valid)

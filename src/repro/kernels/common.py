@@ -1,0 +1,30 @@
+"""Shared kernel utilities: interpret-mode default and padding helpers.
+
+On this CPU container every kernel runs with ``interpret=True`` (Pallas
+executes the kernel body with jnp semantics); on a real TPU the same code
+lowers to Mosaic. Block shapes are chosen for v5e VMEM (~16 MiB usable) and
+MXU alignment (multiples of 128 on matmul dims).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x, axis: int, multiple: int, value=0.0):
+    """Pad axis up to a multiple; returns (padded, original_size)."""
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

@@ -1,0 +1,1 @@
+from repro.kernels.distill_kl import ops, ref

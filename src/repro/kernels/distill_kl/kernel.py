@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: fused temperature-softmax KL distillation loss.
+
+Per distillation batch the loss touches two (n, K) logit tensors; unfused,
+XLA materialises four intermediates (two log-softmaxes, probs, pointwise
+product) in HBM. The kernel computes both stabilised log-softmaxes and the
+weighted KL reduction inside one VMEM tile — one read of each operand, one
+(n,) write.
+
+Grid: 1-D over tiles of n; the class axis K stays whole inside a tile
+(K ≤ a few thousand for FD logits).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 512
+
+
+def _kernel(s_ref, t_ref, temp_ref, out_ref):
+    s = s_ref[...].astype(jnp.float32)
+    t = t_ref[...].astype(jnp.float32)
+    temp = temp_ref[0]
+    s = s / temp
+    t = t / temp
+    s_max = jnp.max(s, axis=-1, keepdims=True)
+    t_max = jnp.max(t, axis=-1, keepdims=True)
+    s_lse = jnp.log(jnp.sum(jnp.exp(s - s_max), axis=-1, keepdims=True)) + s_max
+    t_lse = jnp.log(jnp.sum(jnp.exp(t - t_max), axis=-1, keepdims=True)) + t_max
+    s_logp = s - s_lse
+    t_logp = t - t_lse
+    kl = jnp.sum(jnp.exp(t_logp) * (t_logp - s_logp), axis=-1)
+    out_ref[...] = kl * temp * temp
+
+
+def kd_kl_pallas(student, teacher, temperature, *, block_n: int = BLOCK_N,
+                 interpret: bool = True):
+    """student/teacher: (n, K), n a multiple of block_n (ops pads).
+    Returns per-sample KL (n,) f32."""
+    n, k = student.shape
+    temp = jnp.asarray([temperature], jnp.float32)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(student, teacher, temp)

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the distill_kl kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret, pad_to
+from repro.kernels.distill_kl.kernel import BLOCK_N, kd_kl_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _run(student, teacher, temperature, block_n, interpret):
+    sp, n = pad_to(student, 0, block_n)
+    tp, _ = pad_to(teacher, 0, block_n)
+    kl = kd_kl_pallas(sp, tp, temperature, block_n=block_n,
+                      interpret=interpret)
+    return kl[:n]
+
+
+def kd_kl_per_sample(student, teacher, temperature, *,
+                     block_n: int = BLOCK_N, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _run(jnp.asarray(student), jnp.asarray(teacher),
+                jnp.float32(temperature), block_n, interpret)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused temperature-KL distillation loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_kl_per_sample(student_logits, teacher_logits, temperature):
+    """Per-sample KL(teacher_T ∥ student_T) · T². (n, K) -> (n,)."""
+    t = temperature
+    sp = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    tlogp = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    tp = jnp.exp(tlogp)
+    return jnp.sum(tp * (tlogp - sp), axis=-1) * (t * t)

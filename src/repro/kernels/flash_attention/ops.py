@@ -1,0 +1,37 @@
+"""Jit'd public wrapper: GQA expansion, padding, layout for flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret, pad_to
+from repro.kernels.flash_attention.kernel import (BLOCK_K, BLOCK_Q,
+                                                  flash_attention_pallas)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k", "interpret"))
+def _run(q, k, v, causal, block_q, block_k, interpret):
+    b, n, sq, h = q.shape
+    nkv = k.shape[1]
+    if nkv != n:  # GQA expand
+        rep = n // nkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qp, sq0 = pad_to(q, 2, block_q)
+    kp, sk0 = pad_to(k, 2, block_k)
+    vp, _ = pad_to(v, 2, block_k)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, kv_len=sk0,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+    return out[:, :, :sq0]
+
+
+def attention(q, k, v, *, causal: bool = True, block_q: int = BLOCK_Q,
+              block_k: int = BLOCK_K, interpret: bool | None = None):
+    """q: (B, N, Sq, h); k, v: (B, NKV, Sk, h) — GQA expanded internally."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _run(q, k, v, causal, block_q, block_k, interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for blocked causal GQA attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, N, Sq, h); k, v: (B, N, Sk, h) (kv already GQA-expanded).
+    Returns (B, N, Sq, h) f32."""
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bnqh,bnkh->bnqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    sq, sk = q.shape[2], k.shape[2]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = kpos <= qpos
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bnqk,bnkh->bnqh", probs, v.astype(jnp.float32))

@@ -1,0 +1,1 @@
+from repro.kernels.kmeans_dist import ops, ref

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused min-distance-to-centroid + ID threshold test.
+
+The estimation hot-spot of KMeans-DRE (paper Table IV: O(t·c·d)). TPU-native
+formulation (DESIGN.md §3): ‖x−k‖² = ‖x‖² − 2·x·Kᵀ + ‖k‖² turns the distance
+into one MXU matmul per tile; min-reduction and the threshold compare fuse in
+VMEM so the boolean mask never round-trips to HBM.
+
+Grid: 1-D over tiles of t. The centroid tile (c ≤ 1024, d) stays resident in
+VMEM across grid steps (constant index_map).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 256
+
+
+def _kernel(x_ref, c_ref, thr_ref, dist_ref, mask_ref):
+    x = x_ref[...].astype(jnp.float32)           # (bt, d)
+    c = c_ref[...].astype(jnp.float32)           # (C, d)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)  # (bt, 1)
+    c2 = jnp.sum(c * c, axis=-1)                 # (C,)
+    cross = jax.lax.dot_general(                 # (bt, C) — the MXU matmul
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(x2 - 2.0 * cross + c2[None, :], 0.0)
+    md = jnp.sqrt(jnp.min(d2, axis=-1))
+    dist_ref[...] = md
+    mask_ref[...] = (md <= thr_ref[0]).astype(jnp.int8)
+
+
+def kmeans_dist_pallas(x, centroids, threshold, *, block_t: int = BLOCK_T,
+                       interpret: bool = True):
+    """x: (t, d) — t must be a multiple of block_t (ops.py pads).
+    centroids: (c, d); threshold: scalar.
+    Returns (min_dist (t,) f32, is_id (t,) int8)."""
+    t, d = x.shape
+    c = centroids.shape[0]
+    thr = jnp.asarray([threshold], jnp.float32)
+    grid = (t // block_t,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((c, d), lambda i: (0, 0)),       # resident
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.int8),
+        ],
+        interpret=interpret,
+    )(x, centroids, thr)

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the kmeans_dist kernel (padding + dtype)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret, pad_to
+from repro.kernels.kmeans_dist.kernel import BLOCK_T, kmeans_dist_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def _run(x, centroids, threshold, block_t, interpret):
+    xp, t = pad_to(x, 0, block_t)
+    dist, mask = kmeans_dist_pallas(xp, centroids, threshold,
+                                    block_t=block_t, interpret=interpret)
+    return dist[:t], mask[:t].astype(bool)
+
+
+def min_dist_and_mask(x, centroids, threshold, *, block_t: int = BLOCK_T,
+                      interpret: bool | None = None):
+    """Public op: (min_dist (t,), is_id (t,) bool)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _run(jnp.asarray(x), jnp.asarray(centroids),
+                jnp.float32(threshold), block_t, interpret)

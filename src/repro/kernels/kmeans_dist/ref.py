@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the KMeans-DRE distance/threshold kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def min_dist_and_mask(x, centroids, threshold):
+    """x: (t, d), centroids: (c, d) -> (min_dist (t,), is_id (t,) bool).
+
+    Naive direct form — the correctness oracle (no matmul trick, so it also
+    cross-checks the kernel's ‖x‖²−2x·c+‖c‖² algebra).
+    """
+    diff = x[:, None, :].astype(jnp.float32) - centroids[None, :, :].astype(jnp.float32)
+    d2 = jnp.sum(jnp.square(diff), axis=-1)          # (t, c)
+    md = jnp.sqrt(jnp.min(d2, axis=-1))
+    return md, md <= threshold

@@ -1,0 +1,1 @@
+from repro.kernels.kulsif_rbf import ops, ref

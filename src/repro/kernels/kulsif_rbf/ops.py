@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the kulsif_rbf kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret, pad_to
+from repro.kernels.kulsif_rbf.kernel import BLOCK_M, BLOCK_N, rbf_matrix_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def _run(a, b, sigma, block_m, block_n, interpret):
+    ap, n = pad_to(a, 0, block_m)
+    bp, m = pad_to(b, 0, block_n)
+    out = rbf_matrix_pallas(ap, bp, sigma, block_m=block_m, block_n=block_n,
+                            interpret=interpret)
+    return out[:n, :m]
+
+
+def rbf_matrix(a, b, sigma, *, block_m: int = BLOCK_M, block_n: int = BLOCK_N,
+               interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _run(jnp.asarray(a), jnp.asarray(b), jnp.float32(sigma),
+                block_m, block_n, interpret)

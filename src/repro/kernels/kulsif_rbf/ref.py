@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the tiled RBF (Gaussian) kernel matrix."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_matrix(a, b, sigma):
+    """K[i,j] = exp(−‖a_i−b_j‖² / (2σ²)); a:(n,d), b:(m,d) -> (n,m)."""
+    diff = a[:, None, :].astype(jnp.float32) - b[None, :, :].astype(jnp.float32)
+    d2 = jnp.sum(jnp.square(diff), axis=-1)
+    return jnp.exp(-d2 / (2.0 * sigma * sigma))

@@ -1,0 +1,455 @@
+"""Multi-pod dry-run: lower + compile every (arch × input-shape) on the
+production meshes, and extract the roofline terms from the compiled HLO.
+
+MUST set the host-device override before any other import touches jax.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.common.types import ArchConfig, AttentionKind, InputShape  # noqa: E402
+from repro.configs import ARCHS, SHAPES, get_arch  # noqa: E402
+from repro.launch import mesh as M  # noqa: E402
+from repro.launch.analytic import step_cost  # noqa: E402
+from repro.launch.hlo_analysis import collective_bytes_corrected  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.models.layers import set_attention_options  # noqa: E402
+from repro.models.ssm import set_slstm_unroll  # noqa: E402
+from repro.models.sharding import set_logical_rules, DEFAULT_RULES, PROFILES  # noqa: E402
+from repro.optim.optimizers import adamw  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# TPU v5e constants (roofline)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+# long-context policy (DESIGN.md §4): dense/moe/vlm run long_500k only via
+# the sliding-window variant; ssm/hybrid run native; audio has no decode.
+LONG_WINDOW = 8192
+SKIPS = {
+    ("hubert-xlarge", "decode_32k"): "encoder-only: no decode step",
+    ("hubert-xlarge", "long_500k"): "encoder-only: no decode step",
+}
+
+
+def long_window_for(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+        return LONG_WINDOW
+    return None
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: InputShape, *, dtype=jnp.bfloat16):
+    """Batch pytree of ShapeDtypeStructs for train/prefill steps."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.family == "audio":
+        return {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_stub_dim), dtype),
+                "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+             "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    if cfg.family == "vlm":
+        batch["vision"] = jax.ShapeDtypeStruct((b, cfg.num_vision_tokens, cfg.d_model), dtype)
+    return batch
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape, *, dtype=jnp.bfloat16):
+    """(tokens, pos) specs + cache specs for a serve step."""
+    b = shape.global_batch
+    window = long_window_for(cfg, shape)
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, shape.seq_len, dtype,
+                             window_override=window))
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, pos, cache
+
+
+# ---------------------------------------------------------------------------
+# sharding of inputs / caches
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh, profile: str = "2d"):
+    axes = ("pod", "data", "model") if profile == "dp" else ("pod", "data")
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def cache_shardings(cache, mesh, batch: int):
+    """Shard cache batch over pod+data when divisible, else shard the cache
+    length axis over data (long_500k, batch=1). Heads/model dims sharded on
+    'model' when divisible."""
+    baxes = _batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    model = mesh.shape.get("model", 1)
+    data = mesh.shape.get("data", 1)
+
+    def leaf(path, x):
+        keys = [getattr(p, "key", None) for p in path]
+        shape = x.shape
+        spec = [None] * len(shape)
+        is_kv = keys[-1] in ("k", "v", "ck", "cv") and len(shape) >= 4
+        # find the batch axis: first axis of size `batch` after stack axes
+        try:
+            bi = next(i for i, d in enumerate(shape) if d == batch and i <= 2)
+        except StopIteration:
+            bi = None
+        if bi is not None and batch % max(bsize, 1) == 0 and bsize > 1:
+            spec[bi] = baxes if len(baxes) > 1 else baxes[0]
+        elif is_kv:
+            # batch unshardable -> shard cache length over data
+            li = len(shape) - 3
+            if shape[li] % data == 0 and data > 1:
+                spec[li] = "data"
+        if is_kv:
+            # KV cache: 'model' goes on the LENGTH axis (flash-decode style
+            # sequence parallelism — scores/PV reduce with one tiny psum).
+            # Sharding kv-heads usually fails GQA divisibility, and sharding
+            # head_dim makes QK^T gather the whole cache (measured
+            # 174 GB/step on llama-3.2-vision decode_32k, Perf pair D).
+            li = len(shape) - 3
+            if spec[li] is None and shape[li] % model == 0 and model > 1:
+                spec[li] = "model"
+            elif shape[-2] % model == 0 and shape[-2] >= model and model > 1:
+                spec[-2] = "model"   # kv heads, when they do divide
+            return NamedSharding(mesh, P(*spec))
+        # recurrent/conv state: largest remaining dim on model
+        for cand in range(len(shape) - 1, -1, -1):
+            if spec[cand] is None and shape[cand] % model == 0 \
+                    and shape[cand] >= model and model > 1:
+                spec[cand] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, *, remat: bool = True, lr: float = 3e-4,
+                    opt_state_dtype=None):
+    opt = adamw(lr, state_dtype=opt_state_dtype)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = T.train_loss(p, cfg, batch, remat=remat)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree.map(jnp.add, params, updates)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step, opt
+
+
+def make_serve_step(cfg: ArchConfig, window: Optional[int]):
+    def serve_step(params, tokens, cache, pos):
+        logits, cache = T.decode_step(params, cfg, tokens, cache, pos,
+                                      window_override=window)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        if cfg.family == "audio":
+            logits, _ = T.forward(params, cfg, frames=batch["frames"])
+        elif cfg.family == "vlm":
+            logits, _ = T.forward(params, cfg, batch["tokens"],
+                                  vision=batch["vision"])
+        else:
+            logits, _ = T.forward(params, cfg, batch["tokens"])
+        return logits
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1}
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(segment):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op, per kind."""
+    out = {k: 0 for k in _COLL_KINDS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        lhs, _, rhs = ls.partition(" = ")
+        for kind in _COLL_KINDS:
+            # match op name at the start of RHS type+opname, e.g.
+            # "f32[128]{0} all-reduce(" — require "kind(" in rhs and rhs
+            # not being a fusion mentioning the name in a comment
+            if f" {kind}(" in " " + rhs.split("(")[0].rsplit(" ", 1)[-1] + "(" \
+                    and rhs.split("(")[0].rsplit(" ", 1)[-1].startswith(kind):
+                out[kind] += _shape_bytes(rhs.split("(")[0])
+                out["count"] += 1
+                break
+    return out
+
+
+def roofline(cost: dict, mem: dict, coll: dict, n_chips: int,
+             model_flops: float, analytic) -> dict:
+    """The three roofline terms (seconds).
+
+    compute / memory: from the analytic per-step model (scan bodies are
+    undercounted by cost_analysis — see analytic.py); collective: from the
+    compiled HLO with while-trip-count correction (hlo_analysis.py).
+    HLO raw numbers are kept as cross-checks.
+    """
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(sum(coll[k] for k in _COLL_KINDS))
+    t_compute = analytic.flops / n_chips / PEAK_FLOPS
+    t_memory = analytic.hbm_bytes / n_chips / HBM_BW
+    t_coll = cbytes / ICI_BW
+    dom = max((("compute", t_compute), ("memory", t_memory),
+               ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "analytic_flops_global": analytic.flops,
+        "analytic_hbm_bytes_global": analytic.hbm_bytes,
+        "hlo_flops_per_device_scan_body_once": hlo_flops,
+        "hlo_bytes_per_device_scan_body_once": hlo_bytes,
+        "collective_bytes_per_device": cbytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom,
+        "model_flops_total": model_flops,
+        "useful_flops_ratio": (model_flops / analytic.flops
+                               if analytic.flops else 0.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# the dry run
+# ---------------------------------------------------------------------------
+
+def dryrun_one(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+               remat: bool = True, fsdp: bool = True, verbose: bool = True,
+               opt_state_dtype=None, profile: str = "2d",
+               chunk_q: int = 0, slstm_unroll: int = 1,
+               bf16_psum: bool = False) -> dict:
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    skip = SKIPS.get((cfg.name, shape.name))
+    if skip:
+        return {"arch": cfg.name, "shape": shape.name, "skipped": skip}
+
+    mesh = M.make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rules = dict(PROFILES[profile])
+    if profile == "dp":
+        fsdp = False
+    if shape.mode == "decode":
+        # serving has no optimizer state: TP-only params (no FSDP) kill the
+        # per-token weight gathers (§Perf pair D)
+        fsdp = False
+    set_logical_rules(rules, mesh)
+    set_attention_options(chunk_q=chunk_q, bf16_psum=bf16_psum)
+    set_slstm_unroll(slstm_unroll)
+    dtype = jnp.bfloat16
+    t0 = time.perf_counter()
+
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype))
+    if profile == "dp":
+        pshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, P()), params_shape)
+    else:
+        pshard = M.param_shardings(params_shape, mesh, fsdp=fsdp)
+
+    window = long_window_for(cfg, shape)
+
+    if shape.mode == "train":
+        step, opt = make_train_step(cfg, remat=remat,
+                                    opt_state_dtype=opt_state_dtype)
+        opt_shape = jax.eval_shape(lambda p: opt.init(p), params_shape)
+        oshard = jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, M.param_spec(s.shape, mesh, n_stack_axes=0, fsdp=fsdp))
+            if s.ndim > 0 else NamedSharding(mesh, P()),
+            opt_shape)
+        # optimizer state mirrors param sharding (m, v have param shapes)
+        zshard = M.opt_state_shardings(params_shape, mesh, fsdp=fsdp)
+        oshard = {
+            "m": zshard,
+            "v": jax.tree.map(lambda s: s, zshard),
+            "step": NamedSharding(mesh, P()),
+        }
+        batch = input_specs(cfg, shape, dtype=dtype)
+        baxes = _batch_axes(mesh, profile)
+        bspec = P(baxes if len(baxes) > 1 else baxes[0])
+        bshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(*(list(bspec) + [None] * (len(s.shape) - 1)))),
+            batch)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_shape, opt_shape, batch)
+        # tokens-based model flops: 6 * N_active * tokens
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * cfg.active_param_count() * tokens
+    elif shape.mode == "prefill":
+        step = make_prefill_step(cfg)
+        batch = input_specs(cfg, shape, dtype=dtype)
+        batch.pop("labels")
+        baxes = _batch_axes(mesh, profile)
+        bspec = P(baxes if len(baxes) > 1 else baxes[0])
+        bshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(*(list(bspec) + [None] * (len(s.shape) - 1)))),
+            batch)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard))
+        lowered = jitted.lower(params_shape, batch)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * cfg.active_param_count() * tokens
+    else:  # decode
+        step = make_serve_step(cfg, window)
+        tokens_s, pos_s, cache = decode_specs(cfg, shape, dtype=dtype)
+        cshard = cache_shardings(cache, mesh, shape.global_batch)
+        baxes = _batch_axes(mesh, profile)
+        bsize = int(np.prod([mesh.shape[a] for a in baxes]))
+        tok_spec = (P(baxes if len(baxes) > 1 else baxes[0], None)
+                    if shape.global_batch % bsize == 0 and bsize > 1 else P())
+        tshard = NamedSharding(mesh, tok_spec)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, tshard, cshard,
+                                       NamedSharding(mesh, P())),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(params_shape, tokens_s, cache, pos_s)
+        model_flops = 2.0 * cfg.active_param_count() * shape.global_batch
+
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    coll = collective_bytes_corrected(hlo_text)
+    coll_raw = collective_bytes(hlo_text)
+    analytic = step_cost(cfg, shape, window=window,
+                         opt_bytes_per_param=4.0 if opt_state_dtype else 8.0)
+    rl = roofline(cost or {}, mem, coll, n_chips, model_flops, analytic)
+    result = {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": "x".join(f"{k}={v}" for k, v in mesh.shape.items()),
+        "n_chips": n_chips,
+        "mode": shape.mode,
+        "profile": profile,
+        "fsdp": fsdp,
+        "chunk_q": chunk_q,
+        "slstm_unroll": slstm_unroll,
+        "bf16_psum": bf16_psum,
+        "window_override": window,
+        "compile_s": round(compile_s, 1),
+        "collectives": coll,
+        "collectives_uncorrected": coll_raw,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        **rl,
+    }
+    set_logical_rules(None, None)
+    set_attention_options(chunk_q=0)
+    if verbose:
+        print(json.dumps(result, indent=None, default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--opt-bf16", action="store_true",
+                    help="bf16 AdamW state (memory lever for 405B)")
+    ap.add_argument("--profile", default="2d", choices=sorted(PROFILES),
+                    help="sharding profile (see models/sharding.py)")
+    ap.add_argument("--chunk-q", type=int, default=0,
+                    help="flash-style query-chunked attention tile (0=naive)")
+    ap.add_argument("--slstm-unroll", type=int, default=1,
+                    help="sLSTM time-scan unroll (all-reduce reassociation)")
+    ap.add_argument("--bf16-psum", action="store_true",
+                    help="bf16 output on psum-feeding projections")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                try:
+                    r = dryrun_one(a, s, multi_pod=mp,
+                                   remat=not args.no_remat,
+                                   fsdp=not args.no_fsdp,
+                                   profile=args.profile,
+                                   chunk_q=args.chunk_q,
+                                   slstm_unroll=args.slstm_unroll,
+                                   bf16_psum=args.bf16_psum,
+                                   opt_state_dtype=jnp.bfloat16 if args.opt_bf16 else None)
+                except Exception as e:  # record failures; they are bugs
+                    r = {"arch": a, "shape": s, "multi_pod": mp,
+                         "error": f"{type(e).__name__}: {e}"}
+                    print(json.dumps(r, default=str))
+                results.append(r)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+    errs = [r for r in results if "error" in r]
+    print(f"\n{len(results)} runs, {len(errs)} errors")
+    if errs:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

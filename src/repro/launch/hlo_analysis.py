@@ -1,0 +1,153 @@
+"""Post-compile HLO analysis with while-loop trip-count correction.
+
+XLA's ``cost_analysis``/text both count a ``while`` body ONCE, but our layer
+stacks (and the SSM time loops) are ``lax.scan`` → while loops, so naive
+collective sums undercount by the trip count. This walker:
+
+  1. splits the optimized HLO module into computations,
+  2. finds every while op and its (condition, body) computations,
+  3. reads the trip count from the condition's comparison constant,
+  4. sums collective result-bytes recursively, body × trip_count.
+
+The result is the actual per-device, per-step collective traffic — the input
+to the roofline's collective term.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1}
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)"
+                       r"\[([0-9,]*)\]")
+COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(r"\bwhile\(.*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_WHILE_RE2 = re.compile(r"\bwhile\(.*?body=%?([\w.\-]+).*?condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+_TRIP_RE = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_OP_RE = re.compile(r"=\s*((?:\([^)]*\)|[\w\[\],{}\s]*?))\s*([\w\-]+)\(")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(segment):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _line_op(line: str):
+    """Returns (result_type_segment, op_name) or None."""
+    ls = line.strip()
+    if "=" not in ls:
+        return None
+    m = _OP_RE.search(ls)
+    if not m:
+        return None
+    return m.group(1), m.group(2)
+
+
+def _trip_count(cond_lines) -> int:
+    consts = [int(m.group(1)) for line in cond_lines
+              for m in _CONST_RE.finditer(line)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes_corrected(hlo: str) -> dict:
+    """Per-kind collective bytes with while-body trip multiplication."""
+    comps = split_computations(hlo)
+
+    # map body computation -> trip count; find whiles in every computation
+    whiles = {}   # parent comp -> list[(cond, body, trip_or_None)]
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+            else:
+                m2 = _WHILE_RE2.search(line)
+                if not m2:
+                    continue
+                body, cond = m2.group(1), m2.group(2)
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else None
+            whiles.setdefault(name, []).append((cond, body, trip))
+
+    def comp_bytes(name: str, seen: frozenset) -> dict:
+        if name not in comps or name in seen:
+            return {k: 0 for k in COLL_KINDS} | {"count": 0}
+        out = {k: 0 for k in COLL_KINDS}
+        out["count"] = 0
+        for line in comps[name]:
+            op = _line_op(line)
+            if op is None:
+                continue
+            seg, op_name = op
+            for kind in COLL_KINDS:
+                if op_name == kind or op_name.startswith(kind + "-start"):
+                    out[kind] += _shape_bytes(seg)
+                    out["count"] += 1
+                    break
+        for cond, body, trip in whiles.get(name, []):
+            if trip is None:
+                trip = _trip_count(comps.get(cond, []))
+            inner = comp_bytes(body, seen | {name})
+            for k in COLL_KINDS:
+                out[k] += trip * inner[k]
+            out["count"] += trip * inner["count"]
+        return out
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:  # fall back: largest computation
+        entry = max(comps, key=lambda k: len(comps[k]), default=None)
+    return comp_bytes(entry, frozenset()) if entry else \
+        {k: 0 for k in COLL_KINDS} | {"count": 0}
+
+
+def while_trip_counts(hlo: str) -> list:
+    """Diagnostic: [(body_name, trip_count), ...]."""
+    comps = split_computations(hlo)
+    out = []
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line) or _WHILE_RE2.search(line)
+            if m:
+                tm = _TRIP_RE.search(line)
+                body = m.group(2) if m.re is _WHILE_RE else m.group(1)
+                cond = m.group(1) if m.re is _WHILE_RE else m.group(2)
+                trip = (int(tm.group(1)) if tm
+                        else _trip_count(comps.get(cond, [])))
+                out.append((body, trip))
+    return out

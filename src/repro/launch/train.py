@@ -1,0 +1,96 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--reduced]``.
+
+On real hardware this runs the pjit'd train step on the production mesh; on
+this CPU container use ``--reduced`` (the smoke-scale config) — the same
+code path end to end (config → model → data → optimizer → checkpoint).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCHS, get_arch, reduced as reduce_cfg
+from repro.data.tokens import MarkovTokenStream, synth_frames, synth_vision
+from repro.launch import mesh as M
+from repro.models import transformer as T
+from repro.models.sharding import set_logical_rules, DEFAULT_RULES
+from repro.optim.optimizers import adamw
+from repro.optim.schedules import linear_warmup_cosine
+
+
+def make_batch_fn(cfg, batch: int, seq: int, seed: int = 0):
+    stream = MarkovTokenStream(cfg.vocab_size, seed=seed)
+    rng = np.random.default_rng(seed)
+
+    def next_batch():
+        if cfg.family == "audio":
+            frames = synth_frames(rng, batch, seq, cfg.frontend_stub_dim)
+            labels = rng.integers(0, cfg.vocab_size, (batch, seq)).astype(np.int32)
+            return {"frames": jnp.asarray(frames), "labels": jnp.asarray(labels)}
+        b = stream.batch(batch, seq)
+        out = {"tokens": jnp.asarray(b["tokens"]), "labels": jnp.asarray(b["labels"])}
+        if cfg.family == "vlm":
+            out["vision"] = jnp.asarray(
+                synth_vision(rng, batch, cfg.num_vision_tokens, cfg.d_model))
+        return out
+
+    return next_batch
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    print(f"arch={cfg.name} params≈{cfg.param_count()/1e6:.1f}M "
+          f"active≈{cfg.active_param_count()/1e6:.1f}M")
+
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    opt = adamw(linear_warmup_cosine(args.lr, 10, args.steps))
+    opt_state = opt.init(params)
+    next_batch = make_batch_fn(cfg, args.batch, args.seq)
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return T.train_loss(p, cfg, batch, remat=args.remat)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        upd, opt_state2 = opt.update(grads, opt_state, params)
+        params2 = jax.tree.map(jnp.add, params, upd)
+        return params2, opt_state2, loss
+
+    t0 = time.perf_counter()
+    losses = []
+    for step in range(args.steps):
+        params, opt_state, loss = train_step(params, opt_state, next_batch())
+        losses.append(float(loss))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.perf_counter() - t0
+            print(f"step {step:5d} loss {losses[-1]:.4f} ({dt:.1f}s)")
+    if args.ckpt_dir:
+        p = save_checkpoint(args.ckpt_dir, args.steps, params)
+        print("saved", p)
+    assert losses[-1] < losses[0], "loss did not decrease"
+    print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f} over {args.steps} steps")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

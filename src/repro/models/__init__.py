@@ -1,0 +1,1 @@
+from repro.models import layers, moe, rglru, ssm, transformer, cnn, sharding

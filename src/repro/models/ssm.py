@@ -1,0 +1,405 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan with exponential-gating stabilizer).
+
+TPU adaptation (DESIGN.md §3): mLSTM trains in the chunkwise-parallel form —
+intra-chunk quadratic attention-like compute on an MXU-friendly (L_c × L_c)
+tile plus an inter-chunk `lax.scan` carrying the (d_k × d_v) matrix state —
+instead of a per-timestep CUDA kernel. Decode carries O(1)-in-sequence state,
+which is what makes the ``long_500k`` shape native for this family.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import init_dense
+from repro.models.layers import init_rmsnorm, rmsnorm
+from repro.models.sharding import constrain
+
+CHUNK = 256
+_CLAMP = 8.0  # clamp on input-gate preactivation (keeps exp() in f32 range)
+
+# sLSTM time-scan unroll factor (perf lever, EXPERIMENTS.md §Perf pair B):
+# the recurrent-weight gradient partials are all-reduced once per TIMESTEP
+# when the batch axis is sharded; unrolling the scan body exposes `k`
+# consecutive reductions to XLA's all-reduce-reassociation pass, which
+# collapses them into one per unrolled block (t_collective ÷ k).
+SLSTM_UNROLL = 1
+
+
+def set_slstm_unroll(k: int) -> None:
+    global SLSTM_UNROLL
+    SLSTM_UNROLL = max(1, int(k))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, num_heads: int, dtype=jnp.float32):
+    """Pre-up-projection mLSTM block (proj factor 2)."""
+    d_in = 2 * d_model
+    names = ["wup", "wgate", "wq", "wk", "wv", "wi", "wf", "wo_gate", "wdown"]
+    ks = jax.random.split(key, len(names))
+    std = 1.0 / math.sqrt(d_model)
+    std_i = 1.0 / math.sqrt(d_in)
+    h = d_in // num_heads
+    p = {
+        "norm": init_rmsnorm(d_model, dtype),
+        "wup": (jax.random.normal(ks[0], (d_model, d_in)) * std).astype(dtype),
+        "wgate": (jax.random.normal(ks[1], (d_model, d_in)) * std).astype(dtype),
+        "wq": (jax.random.normal(ks[2], (d_in, num_heads, h)) * std_i).astype(dtype),
+        "wk": (jax.random.normal(ks[3], (d_in, num_heads, h)) * std_i).astype(dtype),
+        "wv": (jax.random.normal(ks[4], (d_in, num_heads, h)) * std_i).astype(dtype),
+        "wi": (jax.random.normal(ks[5], (d_in, num_heads)) * std_i).astype(dtype),
+        "bi": jnp.zeros((num_heads,), dtype),
+        "wf": (jax.random.normal(ks[6], (d_in, num_heads)) * std_i).astype(dtype),
+        "bf": jnp.full((num_heads,), 3.0, dtype),  # init forget-gate open
+        "wdown": (jax.random.normal(ks[8], (d_in, d_model)) * std_i).astype(dtype),
+    }
+    return p
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # (B, N, hk, hv) matrix memory
+    n: jax.Array   # (B, N, hk) normalizer
+
+
+def mlstm_zero_state(batch: int, num_heads: int, head_dim: int, dtype=jnp.float32):
+    return MLSTMState(
+        c=jnp.zeros((batch, num_heads, head_dim, head_dim), dtype),
+        n=jnp.zeros((batch, num_heads, head_dim), dtype),
+    )
+
+
+def _mlstm_gates(p, u):
+    """u: (B,S,d_in) -> per-head q,k,v,(log i, log f) in f32."""
+    q = jnp.einsum("bsd,dnh->bsnh", u, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", u, p["wk"]) / math.sqrt(p["wk"].shape[-1])
+    v = jnp.einsum("bsd,dnh->bsnh", u, p["wv"])
+    log_i = jnp.clip(
+        (jnp.einsum("bsd,dn->bsn", u, p["wi"]) + p["bi"]).astype(jnp.float32),
+        -_CLAMP, _CLAMP)
+    log_f = jax.nn.log_sigmoid(
+        (jnp.einsum("bsd,dn->bsn", u, p["wf"]) + p["bf"]).astype(jnp.float32))
+    return q, k, v, log_i, log_f
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state: MLSTMState):
+    """One chunk, parallel within. q,k,v: (B,L,N,h); gates: (B,L,N) f32."""
+    b, L, n, h = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    A = jnp.cumsum(log_f, axis=1)                          # (B,L,N) inclusive
+    # intra-chunk decay matrix D[t,s] = exp(A_t - A_s + log_i_s), s<=t
+    At = A[:, :, None, :]                                  # (B,L,1,N)
+    As = A[:, None, :, :]                                  # (B,1,L,N)
+    li = log_i[:, None, :, :]                              # (B,1,L,N)
+    expo = At - As + li
+    tri = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])[None, :, :, None]
+    D = jnp.where(tri, jnp.exp(jnp.minimum(expo, _CLAMP * 4)), 0.0)  # (B,L,L,N)
+    scores = jnp.einsum("btnh,bsnh->btsn", qf, kf) * D
+    intra = jnp.einsum("btsn,bsnh->btnh", scores, vf)
+    intra_n = jnp.einsum("btsn,bsnh->btnh", D, kf)
+    # contribution of carried-in state
+    decay_t = jnp.exp(At[:, :, 0, :])                      # (B,L,N) = exp(A_t)
+    inter = jnp.einsum("btnh,bnhg->btng", qf, state.c.astype(jnp.float32)) \
+        * decay_t[..., None]
+    inter_n = state.n.astype(jnp.float32)[:, None] * decay_t[..., None]
+    num = intra + inter                                    # (B,L,N,h_v)
+    nn = intra_n + inter_n                                 # (B,L,N,h_k)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("btnh,btnh->btn", qf, nn)), 1.0)
+    out = num / denom[..., None]
+    # chunk-end state
+    aL = A[:, -1, :]                                       # (B,N)
+    w = jnp.exp(aL[:, None, :] - A + log_i)                # (B,L,N)
+    c_new = state.c.astype(jnp.float32) * jnp.exp(aL)[..., None, None] \
+        + jnp.einsum("bsn,bsnh,bsng->bnhg", w, kf, vf)
+    n_new = state.n.astype(jnp.float32) * jnp.exp(aL)[..., None] \
+        + jnp.einsum("bsn,bsnh->bnh", w, kf)
+    return out, MLSTMState(c_new, n_new)
+
+
+def mlstm_forward(p, x, num_heads: int, *, chunk: int = CHUNK, eps: float = 1e-5):
+    """x: (B,S,d_model) -> (B,S,d_model). Training/prefill path."""
+    b, s, d = x.shape
+    xn = rmsnorm(p["norm"], x, eps)
+    u = jnp.einsum("bsd,de->bse", xn, p["wup"])
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", xn, p["wgate"]))
+    q, k, v, log_i, log_f = _mlstm_gates(p, u)
+    h = q.shape[-1]
+    L = min(chunk, s)
+    pad = (-s) % L
+    if pad:
+        padf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        q, k, v, log_i, log_f = map(padf, (q, k, v, log_i, log_f))
+    nc = (s + pad) // L
+    resh = lambda a: a.reshape((b, nc, L) + a.shape[2:])
+    qs, ks, vs, lis, lfs = map(resh, (q, k, v, log_i, log_f))
+
+    def body(state, inp):
+        qc, kc, vc, lic, lfc = inp
+        out, state = _mlstm_chunk(qc, kc, vc, lic, lfc, state)
+        return state, out
+
+    state0 = mlstm_zero_state(b, num_heads, h)
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qs, ks, vs, lis, lfs))
+    _, outs = jax.lax.scan(body, state0, xs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s + pad, num_heads, h)[:, :s]
+    out = out.reshape(b, s, -1).astype(x.dtype) * gate
+    y = jnp.einsum("bse,ed->bsd", out, p["wdown"])
+    return constrain(x + y, "batch", "seq", "embed")
+
+
+def mlstm_decode(p, x, state: MLSTMState, num_heads: int, eps: float = 1e-5):
+    """x: (B,1,d). Returns (y, new_state)."""
+    b = x.shape[0]
+    xn = rmsnorm(p["norm"], x, eps)
+    u = jnp.einsum("bsd,de->bse", xn, p["wup"])
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", xn, p["wgate"]))
+    q, k, v, log_i, log_f = _mlstm_gates(p, u)
+    qf, kf, vf = (a[:, 0].astype(jnp.float32) for a in (q, k, v))  # (B,N,h)
+    i_t = jnp.exp(log_i[:, 0])                                     # (B,N)
+    f_t = jnp.exp(log_f[:, 0])
+    c = state.c.astype(jnp.float32) * f_t[..., None, None] \
+        + i_t[..., None, None] * jnp.einsum("bnh,bng->bnhg", kf, vf)
+    n = state.n.astype(jnp.float32) * f_t[..., None] + i_t[..., None] * kf
+    num = jnp.einsum("bnh,bnhg->bng", qf, c)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bnh,bnh->bn", qf, n)), 1.0)
+    out = (num / denom[..., None]).reshape(b, 1, -1).astype(x.dtype) * gate
+    y = jnp.einsum("bse,ed->bsd", out, p["wdown"])
+    return x + y, MLSTMState(c, n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, num_heads: int, dtype=jnp.float32):
+    """Post-up-projection sLSTM block: sLSTM at d_model + gated MLP (4/3)."""
+    names = ["wz", "wi", "wf", "wo", "rz", "ri", "rf", "ro", "wup", "wgate", "wdown"]
+    ks = jax.random.split(key, len(names))
+    std = 1.0 / math.sqrt(d_model)
+    h = d_model // num_heads
+    d_ff = (4 * d_model) // 3
+    # recurrent weights are block-diagonal per head: (N, h, h)
+    def rmat(k):
+        return (jax.random.normal(k, (num_heads, h, h)) * (1.0 / math.sqrt(h))).astype(dtype)
+    p = {
+        "norm": init_rmsnorm(d_model, dtype),
+        "wz": (jax.random.normal(ks[0], (d_model, d_model)) * std).astype(dtype),
+        "wi": (jax.random.normal(ks[1], (d_model, d_model)) * std).astype(dtype),
+        "wf": (jax.random.normal(ks[2], (d_model, d_model)) * std).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (d_model, d_model)) * std).astype(dtype),
+        "rz": rmat(ks[4]), "ri": rmat(ks[5]), "rf": rmat(ks[6]), "ro": rmat(ks[7]),
+        "bz": jnp.zeros((d_model,), dtype), "bi": jnp.zeros((d_model,), dtype),
+        "bf": jnp.full((d_model,), 3.0, dtype), "bo": jnp.zeros((d_model,), dtype),
+        "norm2": init_rmsnorm(d_model, dtype),
+        "wup": (jax.random.normal(ks[8], (d_model, d_ff)) * std).astype(dtype),
+        "wgate": (jax.random.normal(ks[9], (d_model, d_ff)) * std).astype(dtype),
+        "wdown": (jax.random.normal(ks[10], (d_ff, d_model)) * (1.0 / math.sqrt(d_ff))).astype(dtype),
+    }
+    return p
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array   # (B, D)
+    c: jax.Array   # (B, D)
+    n: jax.Array   # (B, D)
+    m: jax.Array   # (B, D) log-space stabilizer
+
+
+def slstm_zero_state(batch: int, d_model: int, dtype=jnp.float32):
+    z = jnp.zeros((batch, d_model), dtype)
+    return SLSTMState(z, z, z, jnp.full((batch, d_model), -1e9, jnp.float32))
+
+
+def _slstm_step(p, num_heads, state: SLSTMState, zi_fi_oi):
+    """One timestep. zi_fi_oi: precomputed Wx contributions (B,D) each."""
+    wz, wi, wf, wo = zi_fi_oi
+    b, d = state.h.shape
+    hprev = state.h.reshape(b, num_heads, -1)
+    rec = lambda r: jnp.einsum("bnh,nhg->bng", hprev, r).reshape(b, d)
+    z = jnp.tanh(wz + rec(p["rz"]))
+    i_pre = (wi + rec(p["ri"])).astype(jnp.float32)
+    f_pre = (wf + rec(p["rf"])).astype(jnp.float32)
+    o = jax.nn.sigmoid(wo + rec(p["ro"]))
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state.m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(log_f + state.m - m_new)
+    c = f_s * state.c.astype(jnp.float32) + i_s * z.astype(jnp.float32)
+    n = f_s * state.n.astype(jnp.float32) + i_s
+    h = (o.astype(jnp.float32) * c / jnp.maximum(n, 1e-6)).astype(state.h.dtype)
+    return SLSTMState(h, c.astype(state.c.dtype), n.astype(state.n.dtype), m_new)
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP sLSTM core (perf lever, EXPERIMENTS.md §Perf pair B)
+#
+# Plain AD of the time scan contracts the batch axis of the recurrent-weight
+# gradients INSIDE the loop; under batch sharding GSPMD then emits one
+# all-reduce per timestep (~200 GB/step for train_4k). This VJP accumulates
+# dR with the batch axis KEPT (B, N, h, h) across the reverse scan and sums
+# over batch once at the end — a single all-reduce after the loop.
+# ---------------------------------------------------------------------------
+
+def _local_step(recs, state, num_heads):
+    """Step math given precomputed recurrent contributions (no R inside)."""
+    rz, ri, rf, ro = recs
+    z = jnp.tanh(rz)
+    i_pre = ri.astype(jnp.float32)
+    f_pre = rf.astype(jnp.float32)
+    o = jax.nn.sigmoid(ro)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state.m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(log_f + state.m - m_new)
+    c = f_s * state.c.astype(jnp.float32) + i_s * z.astype(jnp.float32)
+    n = f_s * state.n.astype(jnp.float32) + i_s
+    h = (o.astype(jnp.float32) * c / jnp.maximum(n, 1e-6)).astype(state.h.dtype)
+    return SLSTMState(h, c.astype(state.c.dtype), n.astype(state.n.dtype), m_new)
+
+
+def _recs(rmats, hprev, wx_t, num_heads):
+    b, d = hprev.shape
+    hh = hprev.reshape(b, num_heads, -1)
+    rec = lambda r: jnp.einsum("bnh,nhg->bng", hh, r).reshape(b, d)
+    return tuple(w + rec(r) for w, r in zip(wx_t, rmats))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _slstm_scan(rmats, wx, num_heads):
+    """rmats: (rz, ri, rf, ro) each (N,h,h); wx: 4×(S,B,D) Wx+b inputs.
+    Returns hs (S,B,D)."""
+    b, d = wx[0].shape[1:]
+
+    def body(state, wx_t):
+        state = _local_step(_recs(rmats, state.h, wx_t, num_heads), state,
+                            num_heads)
+        return state, state.h
+
+    _, hs = jax.lax.scan(body, slstm_zero_state(b, d, wx[0].dtype), wx)
+    return hs
+
+
+def _slstm_scan_fwd(rmats, wx, num_heads):
+    b, d = wx[0].shape[1:]
+
+    def body(state, wx_t):
+        new = _local_step(_recs(rmats, state.h, wx_t, num_heads), state,
+                          num_heads)
+        return new, (new.h, state)          # save h_t and state_{t-1}
+
+    _, (hs, prev_states) = jax.lax.scan(
+        body, slstm_zero_state(b, d, wx[0].dtype), wx)
+    return hs, (rmats, wx, prev_states)
+
+
+def _slstm_scan_bwd(num_heads, res, g_hs):
+    rmats, wx, prev_states = res
+    b, d = wx[0].shape[1:]
+    n_h = num_heads
+    hd = d // n_h
+
+    def step_out(recs, state):
+        new = _local_step(recs, state, num_heads)
+        return (new.h, new.c, new.n, new.m)
+
+    zero_state = slstm_zero_state(b, d, wx[0].dtype)
+    dR0 = tuple(jnp.zeros((b, n_h, hd, hd), jnp.float32) for _ in range(4))
+
+    def body(carry, xs):
+        (dh, dc, dn, dm), dR = carry
+        g_t, wx_t, state_prev = xs
+        recs = _recs(rmats, state_prev.h, wx_t, num_heads)
+        _, vjp_fn = jax.vjp(step_out, recs, state_prev)
+        d_recs, d_state = vjp_fn((dh + g_t, dc, dn, dm))
+        # dR accumulated WITH batch axis (the whole point):
+        hprev = state_prev.h.reshape(b, n_h, hd)
+        dR = tuple(
+            acc + jnp.einsum("bnh,bng->bnhg", hprev,
+                             dr.reshape(b, n_h, hd).astype(jnp.float32))
+            for acc, dr in zip(dR, d_recs))
+        # cotangent into h_{t-1} via the recurrent matmuls:
+        dh_prev = d_state.h.astype(jnp.float32)
+        for dr, r in zip(d_recs, rmats):
+            dh_prev = dh_prev + jnp.einsum(
+                "bng,nhg->bnh", dr.reshape(b, n_h, hd).astype(jnp.float32),
+                r.astype(jnp.float32)).reshape(b, d)
+        dwx_t = tuple(dr for dr in d_recs)   # wx enters additively
+        new_carry = ((dh_prev.astype(g_t.dtype), d_state.c, d_state.n,
+                      d_state.m), dR)
+        return new_carry, dwx_t
+
+    st_dt = wx[0].dtype   # slstm_zero_state uses the input dtype for h/c/n
+    zeros = (jnp.zeros((b, d), st_dt), jnp.zeros((b, d), st_dt),
+             jnp.zeros((b, d), st_dt), jnp.zeros((b, d), jnp.float32))
+    (_, dR), dwx = jax.lax.scan(body, (zeros, dR0),
+                                (g_hs, wx, prev_states), reverse=True)
+    # single batch contraction AFTER the loop -> one all-reduce under SPMD
+    d_rmats = tuple(jnp.sum(a, axis=0).astype(r.dtype)
+                    for a, r in zip(dR, rmats))
+    return d_rmats, dwx
+
+
+_slstm_scan.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+USE_SLSTM_CUSTOM_VJP = True
+
+
+def set_slstm_custom_vjp(on: bool) -> None:
+    global USE_SLSTM_CUSTOM_VJP
+    USE_SLSTM_CUSTOM_VJP = bool(on)
+
+
+def slstm_forward(p, x, num_heads: int, eps: float = 1e-5):
+    """x: (B,S,d) -> (B,S,d). Sequential lax.scan over time."""
+    b, s, d = x.shape
+    xn = rmsnorm(p["norm"], x, eps)
+    wz = jnp.einsum("bsd,de->bse", xn, p["wz"]) + p["bz"]
+    wi = jnp.einsum("bsd,de->bse", xn, p["wi"]) + p["bi"]
+    wf = jnp.einsum("bsd,de->bse", xn, p["wf"]) + p["bf"]
+    wo = jnp.einsum("bsd,de->bse", xn, p["wo"]) + p["bo"]
+
+    if USE_SLSTM_CUSTOM_VJP:
+        rmats = (p["rz"], p["ri"], p["rf"], p["ro"])
+        wx = tuple(jnp.moveaxis(a, 1, 0) for a in (wz, wi, wf, wo))
+        hs = _slstm_scan(rmats, wx, num_heads)
+    else:
+        def body(state, inp):
+            state = _slstm_step(p, num_heads, state, inp)
+            return state, state.h
+
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in (wz, wi, wf, wo))
+        _, hs = jax.lax.scan(body, slstm_zero_state(b, d, x.dtype), xs,
+                             unroll=SLSTM_UNROLL)
+    h = jnp.moveaxis(hs, 0, 1)
+    x = x + h
+    # gated MLP
+    xn2 = rmsnorm(p["norm2"], x, eps)
+    u = jnp.einsum("bsd,df->bsf", xn2, p["wup"])
+    g = jax.nn.gelu(jnp.einsum("bsd,df->bsf", xn2, p["wgate"]))
+    y = jnp.einsum("bsf,fd->bsd", u * g, p["wdown"])
+    return constrain(x + y, "batch", "seq", "embed")
+
+
+def slstm_decode(p, x, state: SLSTMState, num_heads: int, eps: float = 1e-5):
+    b = x.shape[0]
+    xn = rmsnorm(p["norm"], x, eps)[:, 0]
+    wz = xn @ p["wz"] + p["bz"]
+    wi = xn @ p["wi"] + p["bi"]
+    wf = xn @ p["wf"] + p["bf"]
+    wo = xn @ p["wo"] + p["bo"]
+    state = _slstm_step(p, num_heads, state, (wz, wi, wf, wo))
+    x = x + state.h[:, None]
+    xn2 = rmsnorm(p["norm2"], x, eps)
+    u = jnp.einsum("bsd,df->bsf", xn2, p["wup"])
+    g = jax.nn.gelu(jnp.einsum("bsd,df->bsf", xn2, p["wgate"]))
+    y = jnp.einsum("bsf,fd->bsd", u * g, p["wdown"])
+    return x + y, state

@@ -1,0 +1,519 @@
+"""Unified backbone assembly for all assigned architecture families.
+
+One config-driven model with family-specific layer stacks, all iterated with
+``jax.lax.scan`` over stacked per-layer parameters (bounded HLO size even at
+126 layers). Three entry points:
+
+  * ``forward``      — full-sequence (training / prefill), returns logits
+                       (+ MoE aux loss) and optionally the filled KV cache.
+  * ``train_loss``   — CE loss (+ MoE aux) for the LM objective; encoder
+                       (audio) uses frame-level unit prediction.
+  * ``decode_step``  — one token against a cache (KV / recurrent state),
+                       the ``decode_32k`` / ``long_500k`` path.
+
+Families:
+  dense / moe   — pre-norm GQA + SwiGLU (or MoE) blocks, scan over layers.
+  vlm           — groups of (cross_attn_every-1) self layers + 1 gated
+                  cross-attention layer; vision embeds come in pre-computed
+                  (frontend stub per assignment carve-out).
+  audio         — encoder-only bidirectional stack over frame embeddings.
+  ssm (xlstm)   — alternating mLSTM / sLSTM groups.
+  hybrid        — (period-1) RG-LRU blocks + 1 local-attention block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ArchConfig, AttentionKind
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import ssm as SSM
+from repro.models.sharding import constrain, gather_fsdp
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over n layer keys -> stacked params (leading axis n)."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: dict[str, Any] = {}
+    if cfg.family != "audio":
+        params["embed"] = (jax.random.normal(keys[0], (cfg.vocab_size, d)) * 0.02).astype(dtype)
+    else:
+        # frontend stub: inputs are frame embeddings; a single projection
+        # stands in for the conv feature extractor output layer norm.
+        params["frame_proj"] = (jax.random.normal(keys[0], (cfg.frontend_stub_dim, d))
+                                * (1.0 / math.sqrt(cfg.frontend_stub_dim))).astype(dtype)
+    params["final_norm"] = L.init_rmsnorm(d, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(keys[1], (d, cfg.vocab_size))
+                             * (1.0 / math.sqrt(d))).astype(dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "audio"):
+        def one(k):
+            ks = jax.random.split(k, 4)
+            p = {
+                "ln1": L.init_rmsnorm(d, dtype),
+                "attn": L.init_attention(ks[0], cfg, dtype),
+                "ln2": L.init_rmsnorm(d, dtype),
+            }
+            if cfg.moe is not None:
+                p["moe"] = MOE.init_moe(ks[1], d, cfg.d_ff, cfg.moe.num_experts, dtype)
+            else:
+                p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, dtype)
+            return p
+        params["blocks"] = _stack_init(one, keys[2], cfg.num_layers)
+
+    elif fam == "vlm":
+        per = cfg.cross_attn_every
+        groups = cfg.num_layers // per
+        n_self = per - 1
+
+        def one_self(k):
+            ks = jax.random.split(k, 2)
+            return {
+                "ln1": L.init_rmsnorm(d, dtype),
+                "attn": L.init_attention(ks[0], cfg, dtype),
+                "ln2": L.init_rmsnorm(d, dtype),
+                "mlp": L.init_mlp(ks[1], d, cfg.d_ff, dtype),
+            }
+
+        def one_cross(k):
+            ks = jax.random.split(k, 2)
+            return {
+                "ln1": L.init_rmsnorm(d, dtype),
+                "attn": L.init_attention(ks[0], cfg, dtype),
+                "gate_attn": jnp.zeros((), dtype),    # tanh-gated, init 0
+                "ln2": L.init_rmsnorm(d, dtype),
+                "mlp": L.init_mlp(ks[1], d, cfg.d_ff, dtype),
+                "gate_mlp": jnp.zeros((), dtype),
+            }
+
+        def one_group(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "self": _stack_init(one_self, k1, n_self),
+                "cross": one_cross(k2),
+            }
+        params["blocks"] = _stack_init(one_group, keys[2], groups)
+
+    elif fam == "ssm":
+        groups = cfg.num_layers // 2
+
+        def one_group(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "mlstm": SSM.init_mlstm(k1, d, cfg.num_heads, dtype),
+                "slstm": SSM.init_slstm(k2, d, cfg.num_heads, dtype),
+            }
+        params["blocks"] = _stack_init(one_group, keys[2], groups)
+
+    elif fam == "hybrid":
+        per = cfg.hybrid_period
+        groups = cfg.num_layers // per
+        n_rec = per - 1
+
+        def one_rec(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "rglru": RG.init_rglru(k1, d, dtype),
+                "ln2": L.init_rmsnorm(d, dtype),
+                "mlp": L.init_mlp(k2, d, cfg.d_ff, dtype),
+            }
+
+        def one_attn(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln1": L.init_rmsnorm(d, dtype),
+                "attn": L.init_attention(k1, cfg, dtype),
+                "ln2": L.init_rmsnorm(d, dtype),
+                "mlp": L.init_mlp(k2, d, cfg.d_ff, dtype),
+            }
+
+        def one_group(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "rec": _stack_init(one_rec, k1, n_rec),
+                "attn": one_attn(k2),
+            }
+        params["blocks"] = _stack_init(one_group, keys[2], groups)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_block(p, x, cfg, positions, *, causal, window):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    x = x + L.attention_forward(p["attn"], h, cfg, positions=positions,
+                                causal=causal, window=window)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        y, aux = MOE.moe_forward(p["moe"], h, top_k=cfg.moe.top_k,
+                                 capacity_factor=cfg.moe.capacity_factor)
+        x = x + y
+    else:
+        x = x + L.mlp_forward(p["mlp"], h)
+    return x, aux
+
+
+def _cross_block(p, x, cfg, vision_kv):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    att = L.attention_forward(p["attn"], h, cfg, causal=False,
+                              kv_override=vision_kv)
+    x = x + jnp.tanh(p["gate_attn"]) * att
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + jnp.tanh(p["gate_mlp"]) * L.mlp_forward(p["mlp"], h)
+    return x
+
+
+def _vision_kv(p_cross, vision, cfg):
+    """Project vision embeddings (B, V, d) to cross-attn K/V (per group).
+
+    Returned un-expanded (n_kv heads); consumers expand per their GQA ratio.
+    """
+    k = jnp.einsum("bvd,dnh->bvnh", vision, p_cross["attn"]["wk"])
+    v = jnp.einsum("bvd,dnh->bvnh", vision, p_cross["attn"]["wv"])
+    return k, v
+
+
+def _maybe_remat(fn, remat: bool):
+    return jax.checkpoint(fn) if remat else fn
+
+
+def forward(params, cfg: ArchConfig, tokens=None, *, frames=None, vision=None,
+            remat: bool = False, window_override: Optional[int] = None):
+    """Full-sequence forward. Returns (logits, aux_loss).
+
+    tokens: (B, S) int32 — LM families.  frames: (B, S, stub_dim) — audio.
+    vision: (B, V, d_model) — vlm patch embeddings (stub).
+    window_override: force sliding-window attention width (long-context
+    variant of dense archs).
+    """
+    fam = cfg.family
+    if fam == "audio":
+        x = jnp.einsum("bsf,fd->bsd", frames, params["frame_proj"])
+        causal = False
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        causal = True
+    x = constrain(x, "batch", "seq", "embed")
+    b, s = x.shape[:2]
+    positions = jnp.arange(s)
+    window = window_override if window_override is not None else (
+        cfg.local_window if cfg.attention == AttentionKind.SLIDING else 0)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if fam in ("dense", "moe", "audio"):
+        def body(carry, p):
+            x, aux = carry
+            x, a = _dense_block(p, x, cfg, positions, causal=causal, window=window)
+            return (x, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(_maybe_remat(body, remat),
+                                         (x, aux_total), params["blocks"])
+
+    elif fam == "vlm":
+        def body(carry, p):
+            x, aux = carry
+            def inner(xc, ps):
+                xc, _ = _dense_block(ps, xc, cfg, positions, causal=True, window=window)
+                return xc, None
+            x, _ = jax.lax.scan(inner, x, p["self"])
+            vkv = _vision_kv(p["cross"], vision, cfg)
+            x = _cross_block(p["cross"], x, cfg, vkv)
+            return (x, aux), None
+        (x, aux_total), _ = jax.lax.scan(_maybe_remat(body, remat),
+                                         (x, aux_total), params["blocks"])
+
+    elif fam == "ssm":
+        def body(carry, p):
+            x, aux = carry
+            x = SSM.mlstm_forward(p["mlstm"], x, cfg.num_heads)
+            x = SSM.slstm_forward(p["slstm"], x, cfg.num_heads)
+            return (x, aux), None
+        (x, aux_total), _ = jax.lax.scan(_maybe_remat(body, remat),
+                                         (x, aux_total), params["blocks"])
+
+    elif fam == "hybrid":
+        def body(carry, p):
+            x, aux = carry
+            def inner(xc, ps):
+                xc = RG.rglru_forward(ps["rglru"], xc, cfg.norm_eps)
+                h = L.rmsnorm(ps["ln2"], xc, cfg.norm_eps)
+                return xc + L.mlp_forward(ps["mlp"], h), None
+            x, _ = jax.lax.scan(inner, x, p["rec"])
+            pa = p["attn"]
+            h = L.rmsnorm(pa["ln1"], x, cfg.norm_eps)
+            x = x + L.attention_forward(pa["attn"], h, cfg, positions=positions,
+                                        causal=True, window=cfg.local_window)
+            h = L.rmsnorm(pa["ln2"], x, cfg.norm_eps)
+            x = x + L.mlp_forward(pa["mlp"], h)
+            return (x, aux), None
+        (x, aux_total), _ = jax.lax.scan(_maybe_remat(body, remat),
+                                         (x, aux_total), params["blocks"])
+    else:
+        raise ValueError(fam)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return constrain(logits, "batch", "seq", "vocab"), aux_total
+
+
+def features(params, cfg: ArchConfig, tokens=None, *, frames=None):
+    """Pooled input-embedding features — the FD filter's embedding space.
+
+    The KMeans-DRE filter (repro.core) operates on a cheap, model-independent
+    feature space (paper §V-C uses pre-extracted features for complex data);
+    pooling the embedding lookup gives every heterogeneous client a filter
+    input without running its full backbone.
+    """
+    x = jnp.take(params["embed"], tokens, axis=0) if tokens is not None else frames
+    return jnp.mean(x, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, *, z_loss: float = 0.0):
+    """Token-mean CE in f32; labels < 0 are masked out."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    ce = lse - ll
+    if z_loss:
+        ce = ce + z_loss * jnp.square(lse)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, remat: bool = False,
+               aux_weight: float = 0.01):
+    """batch: {tokens, labels[, vision, frames]} -> (loss, metrics)."""
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["vision"] = batch["vision"]
+    if cfg.family == "audio":
+        logits, aux = forward(params, cfg, frames=batch["frames"], remat=remat)
+    else:
+        logits, aux = forward(params, cfg, batch["tokens"], remat=remat, **kwargs)
+    ce = cross_entropy(logits, batch["labels"])
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches + decode
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    kind: Any            # static pytree leaf-free marker not stored; see below
+    data: Any
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16,
+               *, window_override: Optional[int] = None, vision=None, params=None):
+    """Build the decode cache pytree for `batch` rows and `cache_len` context.
+
+    dense/moe : {k, v}: (L, B, C, n_kv, h) — C = cache_len, or the sliding
+                window if window_override is set (ring buffer).
+    vlm       : + cross-attn K/V precomputed from vision embeddings.
+    ssm       : mLSTM matrix state + sLSTM scalar state per group.
+    hybrid    : RG-LRU state + conv tail + local-window KV ring buffer.
+    """
+    h = cfg.resolved_head_dim
+    nkv = cfg.num_kv_heads
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        c = min(cache_len, window_override) if window_override else cache_len
+        return {
+            "k": jnp.zeros((cfg.num_layers, batch, c, nkv, h), dtype),
+            "v": jnp.zeros((cfg.num_layers, batch, c, nkv, h), dtype),
+        }
+    if fam == "vlm":
+        per = cfg.cross_attn_every
+        groups = cfg.num_layers // per
+        n_self = per - 1
+        c = min(cache_len, window_override) if window_override else cache_len
+        cache = {
+            "k": jnp.zeros((groups, n_self, batch, c, nkv, h), dtype),
+            "v": jnp.zeros((groups, n_self, batch, c, nkv, h), dtype),
+        }
+        if vision is not None and params is not None:
+            def vk(pg):
+                k, v = _vision_kv(pg["cross"], vision, cfg)
+                return {"ck": k.astype(dtype), "cv": v.astype(dtype)}
+            cache["cross"] = jax.vmap(vk)(params["blocks"])
+        else:
+            nv = cfg.num_vision_tokens
+            cache["cross"] = {
+                "ck": jnp.zeros((groups, batch, nv, nkv, h), dtype),
+                "cv": jnp.zeros((groups, batch, nv, nkv, h), dtype),
+            }
+        return cache
+    if fam == "ssm":
+        groups = cfg.num_layers // 2
+        hh = 2 * cfg.d_model // cfg.num_heads
+        return {
+            "mlstm_c": jnp.zeros((groups, batch, cfg.num_heads, hh, hh), jnp.float32),
+            "mlstm_n": jnp.zeros((groups, batch, cfg.num_heads, hh), jnp.float32),
+            "slstm_h": jnp.zeros((groups, batch, cfg.d_model), dtype),
+            "slstm_c": jnp.zeros((groups, batch, cfg.d_model), jnp.float32),
+            "slstm_n": jnp.zeros((groups, batch, cfg.d_model), jnp.float32),
+            "slstm_m": jnp.full((groups, batch, cfg.d_model), -1e9, jnp.float32),
+        }
+    if fam == "hybrid":
+        per = cfg.hybrid_period
+        groups = cfg.num_layers // per
+        w = min(cfg.local_window, cache_len)
+        return {
+            "rg_h": jnp.zeros((groups, per - 1, batch, cfg.d_model), jnp.float32),
+            "rg_conv": jnp.zeros((groups, per - 1, batch, RG.CONV_W - 1, cfg.d_model), dtype),
+            "k": jnp.zeros((groups, batch, w, nkv, h), dtype),
+            "v": jnp.zeros((groups, batch, w, nkv, h), dtype),
+        }
+    raise ValueError(f"no decode cache for family {fam}")
+
+
+def decode_step(params, cfg: ArchConfig, tokens, cache, pos, *,
+                window_override: Optional[int] = None):
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    fam = cfg.family
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, "embed")
+    window = window_override or 0
+
+    if fam in ("dense", "moe"):
+        ring = window if (window and cache["k"].shape[2] == window) else 0
+
+        def body(x, inp):
+            p, ck, cv = inp
+            h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+            att, nk, nv = L.attention_decode(p["attn"], h, cfg, ck, cv, pos,
+                                             window=ring)
+            x = x + att
+            h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if "moe" in p:
+                y, _ = MOE.moe_forward(p["moe"], h, top_k=cfg.moe.top_k)
+                x = x + y
+            else:
+                x = x + L.mlp_forward(p["mlp"], h)
+            return x, (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": nk, "v": nv}
+
+    elif fam == "vlm":
+        ring = window if (window and cache["k"].shape[3] == window) else 0
+
+        def body(x, inp):
+            p, ck, cv, cross = inp
+
+            def inner(x, si):
+                ps, ck1, cv1 = si
+                h = L.rmsnorm(ps["ln1"], x, cfg.norm_eps)
+                att, nk, nv = L.attention_decode(ps["attn"], h, cfg, ck1, cv1,
+                                                 pos, window=ring)
+                x = x + att
+                h = L.rmsnorm(ps["ln2"], x, cfg.norm_eps)
+                return x + L.mlp_forward(ps["mlp"], h), (nk, nv)
+
+            x, (nk, nv) = jax.lax.scan(inner, x, (p["self"], ck, cv))
+            pc = p["cross"]
+            h = L.rmsnorm(pc["ln1"], x, cfg.norm_eps)
+            q = jnp.einsum("bsd,dnh->bsnh", h, pc["attn"]["wq"])
+            if "bq" in pc["attn"]:
+                q = q + pc["attn"]["bq"]
+            # cross KV layout: (B, num_vision_tokens, n_kv, h) — mask over
+            # the vision-token axis (axis 1)
+            mask = jnp.ones((1, 1, 1, cross["ck"].shape[1]), bool)
+            nrep = cfg.num_heads // cfg.num_kv_heads
+            att = L.attention_scores(q,
+                                     L._expand_kv(cross["ck"].astype(q.dtype), nrep),
+                                     L._expand_kv(cross["cv"].astype(q.dtype), nrep),
+                                     mask)
+            att = jnp.einsum("bsnh,nhd->bsd", att, pc["attn"]["wo"])
+            x = x + jnp.tanh(pc["gate_attn"]) * att
+            h = L.rmsnorm(pc["ln2"], x, cfg.norm_eps)
+            x = x + jnp.tanh(pc["gate_mlp"]) * L.mlp_forward(pc["mlp"], h)
+            return x, (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"], cache["cross"]))
+        new_cache = dict(cache, k=nk, v=nv)
+
+    elif fam == "ssm":
+        def body(x, inp):
+            p, mc, mn, sh, sc, sn, sm = inp
+            x, mst = SSM.mlstm_decode(p["mlstm"], x, SSM.MLSTMState(mc, mn),
+                                      cfg.num_heads)
+            x, sst = SSM.slstm_decode(p["slstm"], x,
+                                      SSM.SLSTMState(sh, sc, sn, sm),
+                                      cfg.num_heads)
+            return x, (mst.c, mst.n, sst.h, sst.c, sst.n, sst.m)
+
+        x, (mc, mn, sh, sc, sn, sm) = jax.lax.scan(
+            body, x, (params["blocks"], cache["mlstm_c"], cache["mlstm_n"],
+                      cache["slstm_h"], cache["slstm_c"], cache["slstm_n"],
+                      cache["slstm_m"]))
+        new_cache = {"mlstm_c": mc, "mlstm_n": mn, "slstm_h": sh,
+                     "slstm_c": sc, "slstm_n": sn, "slstm_m": sm}
+
+    elif fam == "hybrid":
+        w = cache["k"].shape[2]
+
+        def body(x, inp):
+            p, rh, rconv, ck, cv = inp
+
+            def inner(x, ri):
+                ps, h0, c0 = ri
+                x, st = RG.rglru_decode(ps["rglru"], x, RG.RGLRUState(h0, c0),
+                                        cfg.norm_eps)
+                h = L.rmsnorm(ps["ln2"], x, cfg.norm_eps)
+                x = x + L.mlp_forward(ps["mlp"], h)
+                return x, (st.h, st.conv)
+
+            x, (nh, nconv) = jax.lax.scan(inner, x, (p["rec"], rh, rconv))
+            pa = p["attn"]
+            h = L.rmsnorm(pa["ln1"], x, cfg.norm_eps)
+            att, nk, nv = L.attention_decode(pa["attn"], h, cfg, ck, cv, pos,
+                                             window=w)
+            x = x + att
+            h = L.rmsnorm(pa["ln2"], x, cfg.norm_eps)
+            x = x + L.mlp_forward(pa["mlp"], h)
+            return x, (nh, nconv, nk, nv)
+
+        x, (nh, nconv, nk, nv) = jax.lax.scan(
+            body, x, (params["blocks"], cache["rg_h"], cache["rg_conv"],
+                      cache["k"], cache["v"]))
+        new_cache = {"rg_h": nh, "rg_conv": nconv, "k": nk, "v": nv}
+    else:
+        raise ValueError(f"decode unsupported for family {fam}")
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return constrain(logits, "batch", None, "vocab"), new_cache

@@ -1,0 +1,95 @@
+"""Pure-JAX pytree optimizers (optax-style (init, update) pairs).
+
+State pytrees mirror the parameter pytree, so whatever sharding the params
+carry propagates to optimizer state (and the ZeRO hillclimb can re-shard the
+state independently via the launcher's spec rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable   # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(jnp.add, params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def sgd(lr, momentum: float = 0.9, nesterov: bool = False):
+    """lr: float or schedule fn(step)->float."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lrv = lr_fn(step)
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -(lrv) * (momentum * m + g), mu, grads)
+        else:
+            upd = jax.tree.map(lambda m: -(lrv) * m, mu)
+        return upd, {"mu": mu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=None):
+    """AdamW. ``state_dtype`` (e.g. bf16) halves optimizer memory —
+    the beyond-paper memory lever used for llama3-405b (EXPERIMENTS.md §Perf).
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _cast(x):
+        return x.astype(state_dtype) if state_dtype is not None else x
+
+    def init(params):
+        z = lambda p: _cast(jnp.zeros_like(p, dtype=jnp.float32))
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lrv = lr_fn(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * gf
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(gf)
+            mh = m32 / bc1
+            vh = v32 / bc2
+            u = -(lrv) * (mh / (jnp.sqrt(vh) + eps)
+                          + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), _cast(m32), _cast(v32)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        # unzip the 3-tuples
+        treedef = jax.tree.structure(grads)
+        flat = treedef.flatten_up_to(out)
+        us, ms, vs = zip(*flat)
+        return (jax.tree.unflatten(treedef, us),
+                {"m": jax.tree.unflatten(treedef, ms),
+                 "v": jax.tree.unflatten(treedef, vs),
+                 "step": step})
+
+    return Optimizer(init, update)

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cd = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.float32(lr) * s / jnp.maximum(warmup, 1)
+        return jnp.where(step <= warmup, warm, cd(step - warmup))
+    return fn

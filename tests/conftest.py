@@ -1,0 +1,8 @@
+import os
+
+# tests run on the single real CPU device; only dryrun.py overrides this
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

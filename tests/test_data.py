@@ -1,0 +1,90 @@
+"""Data pipeline invariants: partitioners, proxy construction, token streams."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import partition
+from repro.data.proxy import build_proxy
+from repro.data.synthetic import make_dataset
+from repro.data.tokens import MarkovTokenStream
+
+
+def _toy(n=400, k=10, seed=0):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, k, n)
+    x = rng.standard_normal((n, 5)) + y[:, None]
+    return x, y
+
+
+def test_strong_noniid_disjoint_labels():
+    x, y = _toy()
+    parts = partition(x, y, num_clients=5, num_classes=10, scenario="strong")
+    seen = set()
+    for p in parts:
+        labels = set(np.unique(p.y))
+        assert labels <= set(p.labels)
+        assert not (labels & seen), "strong non-IID labels must not overlap"
+        seen |= labels
+    total = sum(len(p.y) for p in parts)
+    assert total == len(y)
+
+
+@settings(max_examples=15, deadline=None)
+@given(nc=st.integers(2, 10), lpc=st.integers(1, 5), seed=st.integers(0, 1000))
+def test_weak_noniid_label_budget(nc, lpc, seed):
+    x, y = _toy(seed=seed)
+    parts = partition(x, y, num_clients=nc, num_classes=10, scenario="weak",
+                      labels_per_client=lpc, seed=seed)
+    assert sum(len(p.y) for p in parts) == len(y)
+    for p in parts:
+        assert set(np.unique(p.y)) <= set(p.labels)
+
+
+def test_iid_covers_all():
+    x, y = _toy()
+    parts = partition(x, y, num_clients=4, num_classes=10, scenario="iid")
+    assert sum(len(p.y) for p in parts) == len(y)
+    # every client should see most classes under IID
+    for p in parts:
+        assert len(np.unique(p.y)) >= 8
+
+
+def test_proxy_provenance_and_fraction():
+    x, y = _toy()
+    parts = partition(x, y, num_clients=5, num_classes=10, scenario="strong")
+    proxy = build_proxy(parts, alpha=0.2, seed=0)
+    assert len(proxy.y) == len(proxy.owner) == len(proxy.x)
+    for cid, p in enumerate(parts):
+        take = (proxy.owner == cid).sum()
+        assert abs(take - 0.2 * len(p.y)) <= 1
+        # provenance: every proxy sample owned by cid exists in cid's data
+        mine = proxy.x[proxy.owner == cid]
+        for row in mine[:3]:
+            assert (np.isclose(p.x, row).all(axis=1)).any()
+
+
+def test_synthetic_dataset_separation_ordering():
+    """mnist-like clusters are tighter than cifar-like (paper Fig 4)."""
+    def score(name):
+        ds = make_dataset(name, n_train=500, n_test=10)
+        x = np.asarray(ds.x).reshape(500, -1)
+        y = np.asarray(ds.y)
+        mus = np.stack([x[y == c].mean(0) for c in range(10) if (y == c).any()])
+        within = np.mean([np.linalg.norm(x[y == c] - x[y == c].mean(0), axis=1).mean()
+                          for c in range(10) if (y == c).sum() > 1])
+        between = np.linalg.norm(mus[:, None] - mus[None], axis=-1)
+        between = between[between > 0].mean()
+        return between / within
+    assert score("mnist_feat") > score("cifar_feat")
+
+
+def test_markov_stream_learnable():
+    st_ = MarkovTokenStream(100, branching=4, seed=0)
+    b = st_.batch(8, 50)
+    assert b["tokens"].shape == (8, 50)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    # successors constrained: each token's next token is one of 4
+    succ = st_.succ
+    for r in range(8):
+        for t in range(49):
+            assert b["tokens"][r, t + 1] in succ[b["tokens"][r, t]]

@@ -1,0 +1,61 @@
+"""Two-stage client filter properties (Algorithm 1, CLIENTFILTER)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dre import KMeansDRE
+from repro.core.filtering import membership_mask, server_entropy_filter, two_stage_filter
+
+
+def _fitted_dre(key, n=200, d=6):
+    x = jax.random.normal(key, (n, d))
+    return KMeansDRE(num_centroids=1).learn(jax.random.fold_in(key, 1), x), x
+
+
+def test_stage1_membership_always_id():
+    key = jax.random.PRNGKey(0)
+    dre, private = _fitted_dre(key)
+    # proxy: far-away OOD samples, but owned by this client
+    proxy = jax.random.normal(jax.random.fold_in(key, 2), (50, 6)) + 100.0
+    owner = jnp.zeros((50,), jnp.int32)
+    fs = two_stage_filter(dre, proxy, owner, client_id=0)
+    assert bool(jnp.all(fs.mask)), "own proxy samples must always be ID"
+    assert bool(jnp.all(fs.stage1))
+    assert not bool(jnp.any(fs.stage2))    # distance test would reject them
+
+
+def test_mask_is_union_of_stages():
+    key = jax.random.PRNGKey(1)
+    dre, _ = _fitted_dre(key)
+    proxy = jnp.concatenate([
+        jax.random.normal(jax.random.fold_in(key, 2), (40, 6)),          # ID
+        jax.random.normal(jax.random.fold_in(key, 3), (40, 6)) + 50.0,   # OOD
+    ])
+    owner = jnp.asarray([7] * 40 + [0] * 20 + [7] * 20, jnp.int32)
+    fs = two_stage_filter(dre, proxy, owner, client_id=0)
+    np.testing.assert_array_equal(np.asarray(fs.mask),
+                                  np.asarray(fs.stage1 | fs.stage2))
+    # the 20 OOD samples owned by client 0 survive through stage 1 only
+    assert bool(jnp.all(fs.mask[40:60]))
+    assert not bool(jnp.any(fs.mask[60:]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(t=st.integers(1, 64), cid=st.integers(0, 9), seed=st.integers(0, 2**31 - 1))
+def test_membership_exactness(t, cid, seed):
+    rng = np.random.default_rng(seed)
+    owner = rng.integers(0, 10, t).astype(np.int32)
+    m = np.asarray(membership_mask(jnp.asarray(owner), cid))
+    np.testing.assert_array_equal(m, owner == cid)
+
+
+def test_server_entropy_filter_drops_uniform_logits():
+    c, t, k = 3, 10, 10
+    confident = jnp.zeros((c, t, k)).at[..., 0].set(10.0)
+    uniform = jnp.zeros((c, t, k))
+    mask = jnp.ones((c, t), bool)
+    keep_conf = server_entropy_filter(confident, mask)
+    keep_unif = server_entropy_filter(uniform, mask)
+    assert bool(jnp.all(keep_conf))
+    assert not bool(jnp.any(keep_unif))

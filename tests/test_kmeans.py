@@ -1,0 +1,68 @@
+"""KMeans + KMeans-DRE unit & property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kmeans import kmeans_fit, min_dist_to_centroids, pairwise_sq_dists
+
+
+def _blobs(key, n_per: int, centers, std=0.5):
+    ks = jax.random.split(key, len(centers))
+    xs = [c + std * jax.random.normal(k, (n_per, len(c)))
+          for k, c in zip(ks, jnp.asarray(centers, jnp.float32))]
+    return jnp.concatenate(xs)
+
+
+def test_pairwise_matches_direct():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (40, 7))
+    c = jax.random.normal(jax.random.fold_in(key, 1), (5, 7))
+    direct = jnp.sum((x[:, None] - c[None]) ** 2, -1)
+    np.testing.assert_allclose(np.asarray(pairwise_sq_dists(x, c)),
+                               np.asarray(direct), rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_recovers_blobs():
+    key = jax.random.PRNGKey(1)
+    centers = [[0.0, 0.0], [10.0, 0.0], [0.0, 10.0]]
+    x = _blobs(key, 100, centers)
+    res = kmeans_fit(jax.random.PRNGKey(2), x, 3)
+    # each true center has a learned centroid within 1.0
+    d = jnp.sqrt(pairwise_sq_dists(jnp.asarray(centers, jnp.float32),
+                                   res.centroids))
+    assert float(jnp.max(jnp.min(d, axis=1))) < 1.0
+
+
+def test_kmeans_shapes_and_assignment_range():
+    x = jax.random.normal(jax.random.PRNGKey(3), (123, 9))
+    res = kmeans_fit(jax.random.PRNGKey(4), x, 4)
+    assert res.centroids.shape == (4, 9)
+    assert res.assignments.shape == (123,)
+    assert int(res.assignments.min()) >= 0
+    assert int(res.assignments.max()) < 4
+    assert float(res.inertia) >= 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(10, 80), d=st.integers(1, 10), k=st.integers(1, 5),
+       seed=st.integers(0, 2**31 - 1))
+def test_kmeans_inertia_not_worse_than_single_centroid(n, d, k, seed):
+    """Property: k centroids never fit worse than the global mean."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    res = kmeans_fit(jax.random.PRNGKey(seed + 1), x, k)
+    mean = jnp.mean(x, axis=0, keepdims=True)
+    inertia1 = float(jnp.sum(pairwise_sq_dists(x, mean)))
+    assert float(res.inertia) <= inertia1 + 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(5, 60), d=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_min_dist_nonnegative_and_zero_on_centroids(n, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    res = kmeans_fit(jax.random.PRNGKey(seed + 1), x, min(3, n))
+    md = min_dist_to_centroids(x, res.centroids)
+    assert float(md.min()) >= 0.0
+    on_cent = min_dist_to_centroids(res.centroids, res.centroids)
+    np.testing.assert_allclose(np.asarray(on_cent), 0.0, atol=1e-3)

@@ -1,0 +1,161 @@
+"""Per-architecture smoke tests + decode/prefill consistency.
+
+Every assigned architecture instantiates its REDUCED same-family variant
+(≤2 layers-worth of groups, d_model ≤ 512, ≤4 experts), runs one forward /
+train step on CPU, and asserts output shapes + no NaNs. Decode-capable
+families additionally verify that token-by-token decode with a cache
+reproduces the full-sequence forward logits (the key cache-correctness
+invariant).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, reduced
+from repro.models import transformer as T
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch_for(cfg, key, b=2, s=16):
+    if cfg.family == "audio":
+        return {"frames": jax.random.normal(key, (b, s, cfg.frontend_stub_dim)),
+                "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(
+            jax.random.fold_in(key, 9), (b, cfg.num_vision_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = reduced(get_arch(arch))
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    b, s = 2, 16
+    batch = _batch_for(cfg, key, b, s)
+    if cfg.family == "audio":
+        logits, aux = T.forward(params, cfg, frames=batch["frames"])
+    elif cfg.family == "vlm":
+        logits, aux = T.forward(params, cfg, batch["tokens"],
+                                vision=batch["vision"])
+    else:
+        logits, aux = T.forward(params, cfg, batch["tokens"])
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = reduced(get_arch(arch))
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(cfg, key)
+    batch = _batch_for(cfg, key)
+    loss, grads = jax.value_and_grad(
+        lambda p: T.train_loss(p, cfg, batch)[0])(params)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0.0
+
+
+DECODE_ARCHS = [a for a in ALL_ARCHS if get_arch(a).family != "audio"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_forward(arch):
+    """Token-by-token decode must reproduce full-sequence forward logits.
+
+    MoE: exact equivalence requires no capacity dropping (Switch-style
+    drops depend on batch composition), so the test raises the capacity
+    factor to cover every token; production keeps 1.25.
+    """
+    import dataclasses
+    from repro.common.types import MoEConfig
+    cfg = reduced(get_arch(arch))
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=MoEConfig(
+            num_experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
+            capacity_factor=float(cfg.moe.num_experts)))
+    key = jax.random.PRNGKey(2)
+    params = T.init_params(cfg, key)
+    b, s = 2, 12
+    batch = _batch_for(cfg, key, b, s)
+    tokens = batch["tokens"]
+    kw = {"vision": batch["vision"]} if cfg.family == "vlm" else {}
+    ref_logits, _ = T.forward(params, cfg, tokens, **kw)
+
+    cache = T.init_cache(cfg, b, s + 4, jnp.float32,
+                         vision=batch.get("vision"), params=params)
+    outs = []
+    for t in range(s):
+        lg, cache = T.decode_step(params, cfg, tokens[:, t:t + 1], cache,
+                                  jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(ref_logits),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_sliding_window_matches_ref():
+    """Dense arch with window_override: decode attends to ≤W last tokens."""
+    import dataclasses
+    cfg = reduced(get_arch("granite-8b"))
+    key = jax.random.PRNGKey(3)
+    params = T.init_params(cfg, key)
+    b, s, w = 1, 20, 8
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    ref_logits, _ = T.forward(params, cfg, tokens, window_override=w)
+    cache = T.init_cache(cfg, b, s, jnp.float32, window_override=w)
+    assert cache["k"].shape[2] == w    # ring buffer is the window
+    outs = []
+    for t in range(s):
+        lg, cache = T.decode_step(params, cfg, tokens[:, t:t + 1], cache,
+                                  jnp.int32(t), window_override=w)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref_logits),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_aux_loss_positive_and_balanced_at_uniform():
+    cfg = reduced(get_arch("granite-moe-1b-a400m"))
+    key = jax.random.PRNGKey(4)
+    params = T.init_params(cfg, key)
+    batch = _batch_for(cfg, key)
+    _, aux = T.forward(params, cfg, batch["tokens"])
+    # Switch aux loss is >= 1.0 at perfect balance (E * sum f*p = 1)
+    assert float(aux) / cfg.num_layers >= 0.9
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "xlstm-350m", "recurrentgemma-2b"])
+def test_two_step_loss_decreases(arch):
+    """A few SGD steps on a fixed batch reduce the loss (trainability)."""
+    cfg = reduced(get_arch(arch))
+    key = jax.random.PRNGKey(5)
+    params = T.init_params(cfg, key)
+    batch = _batch_for(cfg, key, b=4, s=32)
+    lr = 5e-2
+
+    @jax.jit
+    def step(p):
+        loss, g = jax.value_and_grad(lambda q: T.train_loss(q, cfg, batch)[0])(p)
+        return loss, jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+    l0, params = step(params)
+    for _ in range(5):
+        l1, params = step(params)
+    assert float(l1) < float(l0)
+
+
+def test_param_count_analytic_close_to_actual():
+    """ArchConfig.param_count() (roofline input) tracks the real pytree."""
+    for arch in ["qwen2.5-3b", "granite-8b"]:
+        cfg = reduced(get_arch(arch))
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        est = cfg.param_count()
+        assert abs(est - actual) / actual < 0.15, (arch, est, actual)

@@ -1,0 +1,73 @@
+"""Optimizer convergence + checkpoint roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.optim.optimizers import adamw, apply_updates, clip_by_global_norm, sgd
+from repro.optim.schedules import cosine_decay, linear_warmup_cosine
+
+
+@pytest.mark.parametrize("make_opt", [lambda: sgd(0.1), lambda: adamw(0.1)])
+def test_optimizer_converges_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(1.5)}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(200):
+        g = jax.grad(loss_fn)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss_fn(params)) < 1e-3
+
+
+def test_adamw_bf16_state_dtype():
+    opt = adamw(0.1, state_dtype=jnp.bfloat16)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    upd, state = opt.update(g, state, params)
+    assert upd["w"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(jnp.sum(jnp.square(clipped["a"])))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+def test_schedules_shapes():
+    s = linear_warmup_cosine(1e-3, 10, 100)
+    assert float(s(jnp.int32(0))) <= 1.1e-4
+    np.testing.assert_allclose(float(s(jnp.int32(10))), 1e-3, rtol=1e-5)
+    assert float(s(jnp.int32(100))) < 5e-4
+    c = cosine_decay(1.0, 100)
+    assert float(c(jnp.int32(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layer": {"w": jnp.arange(6.0).reshape(2, 3),
+                      "b": jnp.zeros(3)},
+            "step": jnp.int32(7)}
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 3, tree)
+    assert latest_step(d) == 3
+    like = jax.tree.map(jnp.zeros_like, tree)
+    out = restore_checkpoint(d, 3, like)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 0, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_checkpoint(d, 0, {"w": jnp.zeros((3, 3))})

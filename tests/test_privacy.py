@@ -1,0 +1,61 @@
+"""Gaussian-mechanism proxy privatization (beyond-paper, §V-D)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.privacy import (clip_samples, gaussian_sigma, make_dp,
+                                privatize_proxy, privatize_proxy_np)
+
+
+def test_sigma_monotone_in_epsilon():
+    assert gaussian_sigma(0.5, 1e-5, 1.0) > gaussian_sigma(2.0, 1e-5, 1.0)
+    with pytest.raises(ValueError):
+        gaussian_sigma(0.0, 1e-5, 1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 32), d=st.integers(1, 16), c=st.floats(0.1, 5.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_clip_bounds_norm(n, d, c, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * 10
+    clipped = clip_samples(x, c)
+    norms = jnp.linalg.norm(clipped.reshape(n, -1), axis=1)
+    assert float(norms.max()) <= c + 1e-4
+
+
+def test_privatize_noise_scale():
+    dp = make_dp(epsilon=1.0, delta=1e-5, clip_norm=1.0)
+    x = jnp.zeros((2000, 8))
+    out = privatize_proxy(jax.random.PRNGKey(0), x, dp)
+    emp = float(jnp.std(out))
+    assert abs(emp - dp.sigma) / dp.sigma < 0.1
+
+
+def test_np_and_jax_variants_match_distribution():
+    dp = make_dp(epsilon=2.0)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((500, 6)).astype(np.float32) * 3
+    a = privatize_proxy_np(rng, x, dp)
+    b = np.asarray(privatize_proxy(jax.random.PRNGKey(1), jnp.asarray(x), dp))
+    assert abs(a.std() - b.std()) < 0.2
+
+
+def test_privacy_accuracy_tradeoff():
+    """More noise on the proxy -> DRE filtering degrades monotonically-ish."""
+    from repro.core.dre import KMeansDRE
+    key = jax.random.PRNGKey(5)
+    private = jax.random.normal(key, (300, 8))
+    ood = jax.random.normal(jax.random.fold_in(key, 1), (100, 8)) + 8.0
+    dre = KMeansDRE(num_centroids=1).learn(jax.random.fold_in(key, 2), private)
+    aucs = []
+    for eps in (100.0, 1.0, 0.05):
+        dp = make_dp(epsilon=eps, clip_norm=10.0)
+        noisy_id = privatize_proxy(jax.random.fold_in(key, 3), private, dp)
+        noisy_ood = privatize_proxy(jax.random.fold_in(key, 4), ood, dp)
+        acc = (float(np.asarray(dre.is_id(noisy_id)).mean())
+               + 1 - float(np.asarray(dre.is_id(noisy_ood)).mean())) / 2
+        aucs.append(acc)
+    assert aucs[0] > 0.8          # weak noise: filter still works
+    assert aucs[0] >= aucs[-1]    # strong noise cannot be better

@@ -1,0 +1,104 @@
+"""Sharding-spec derivation + HLO analysis unit tests (1-device safe)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import mesh as M
+from repro.launch.analytic import step_cost
+from repro.launch.hlo_analysis import (collective_bytes_corrected,
+                                       split_computations, while_trip_counts)
+from repro.configs import SHAPES, get_arch
+
+
+class FakeMesh:
+    """Duck-typed mesh for spec derivation without devices."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+def test_param_spec_prefers_largest_divisible():
+    mesh = FakeMesh(data=16, model=16)
+    spec = M.param_spec((2048, 11008), mesh)
+    assert spec == P("data", "model")
+    spec = M.param_spec((11008, 2048), mesh)
+    assert spec == P("model", "data")
+
+
+def test_param_spec_skips_stack_axes():
+    mesh = FakeMesh(data=16, model=16)
+    spec = M.param_spec((36, 2048, 11008), mesh, n_stack_axes=1)
+    assert spec[0] is None
+
+
+def test_param_spec_indivisible_replicates():
+    mesh = FakeMesh(data=16, model=16)
+    spec = M.param_spec((10, 7), mesh)
+    assert spec == P(None, None)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+       model=st.sampled_from([1, 4, 16]), data=st.sampled_from([1, 4, 16]))
+def test_param_spec_always_divisible(dims, model, data):
+    """Property: whatever the shape, assigned axes always divide evenly."""
+    mesh = FakeMesh(data=data, model=model)
+    spec = M.param_spec(tuple(dims), mesh)
+    for d, axis in zip(dims, spec):
+        if axis == "model":
+            assert d % model == 0
+        if axis == "data":
+            assert d % data == 0
+    # an axis is used at most once
+    axes = [a for a in spec if a]
+    assert len(axes) == len(set(axes))
+
+
+def test_hlo_trip_count_correction():
+    """A jitted scan's collectives must be multiplied by trip count."""
+    mesh = jax.make_mesh((1,), ("data",))
+
+    def f(x):
+        def body(c, _):
+            c = jax.lax.with_sharding_constraint(
+                c, jax.sharding.NamedSharding(mesh, P(None)))
+            return c * 2.0, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    txt = jax.jit(f).lower(jnp.ones((8,))).compile().as_text()
+    comps = split_computations(txt)
+    assert len(comps) >= 1
+    trips = while_trip_counts(txt)
+    if trips:  # XLA may unroll tiny loops; if a while exists, trip must be 7
+        assert any(t == 7 for _, t in trips)
+
+
+def test_analytic_cost_model_scales():
+    qwen = get_arch("qwen2.5-3b")
+    llama = get_arch("llama3-405b")
+    tr = SHAPES["train_4k"]
+    c_q = step_cost(qwen, tr)
+    c_l = step_cost(llama, tr)
+    # 405b must cost ~2 orders of magnitude more compute than 3b
+    assert c_l.flops / c_q.flops > 50
+    # train flops ≈ 6·N·T
+    t = tr.global_batch * tr.seq_len
+    assert c_q.flops == pytest.approx(6 * qwen.active_param_count() * t,
+                                      rel=0.35)
+
+
+def test_analytic_decode_memory_dominated_by_params_or_cache():
+    cfg = get_arch("llama3-405b")
+    c = step_cost(cfg, SHAPES["decode_32k"])
+    assert c.detail["param_bytes"] + c.detail["cache_bytes"] == \
+        pytest.approx(c.hbm_bytes - SHAPES["decode_32k"].global_batch
+                      * cfg.vocab_size * 2)
+
+
+def test_make_debug_mesh_single_device():
+    mesh = M.make_debug_mesh(1, 1)
+    assert mesh.shape == {"data": 1, "model": 1}
