@@ -15,6 +15,7 @@ cfg = FedConfig(
     proxy_batch=300,          # |I_r| proxy samples per round
     id_threshold=None,        # None => per-client quantile calibration
     lr=1e-2,
+    engine="cohort",          # vmapped clients; "loop" = same results, 1-by-1
 )
 
 result = simulator.run(cfg, dataset_name="mnist_feat",

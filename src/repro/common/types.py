@@ -142,3 +142,7 @@ class FedConfig:
     batch_size: int = 64
     feature_extractor: bool = False  # CIFAR10*-style pre-extracted features
     seed: int = 0
+    # execution engine: "loop" drives clients one by one (heterogeneous-safe);
+    # "cohort" stacks homogeneous-architecture clients and vmaps every round
+    # phase (repro.fed.cohort) — same round logs, far fewer dispatches.
+    engine: str = "loop"

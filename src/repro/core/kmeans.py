@@ -86,6 +86,19 @@ def kmeans_fit(key, x, k: int, max_iter: int = 50, tol: float = 1e-6):
     return KMeansResult(cents, assign, inertia, iters)
 
 
+@partial(jax.jit, static_argnames=("k", "max_iter"))
+def kmeans_fit_batched(keys, xs, k: int, max_iter: int = 50, tol: float = 1e-6):
+    """Fit one KMeans per leading-axis slice in a single compiled call.
+
+    keys: (C, 2) PRNG keys; xs: (C, n, d) stacked per-client data (same n and
+    k for every slice — the cohort engine's homogeneity rule). Returns a
+    ``KMeansResult`` whose fields carry a leading client axis. Equivalent to
+    looping ``kmeans_fit`` per slice (same keys ⇒ same seeding draws), which
+    ``tests/test_dre_contract.py`` checks.
+    """
+    return jax.vmap(lambda kk, xx: kmeans_fit(kk, xx, k, max_iter, tol))(keys, xs)
+
+
 def min_dist_to_centroids(x, centroids):
     """Euclidean distance of each row of x to its nearest centroid."""
     d2 = pairwise_sq_dists(x.astype(jnp.float32), centroids.astype(jnp.float32))

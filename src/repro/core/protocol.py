@@ -1,24 +1,35 @@
-"""Algorithm 1 — the EdgeFD round protocol, generic over Method.
+"""Algorithm 1 — the EdgeFD round protocol, generic over Method and engine.
 
 ``run_round`` executes one training-phase iteration (lines 12–17);
 ``run_experiment`` wires data → clients → rounds → evaluation and returns
 a result record (accuracy history per client + communication accounting).
+
+The round logic is written against a small *client engine* interface so the
+same protocol drives two execution strategies:
+
+  * ``LoopEngine`` (here) — iterate a ``List[Client]`` one at a time.
+    Always correct, required for heterogeneous architectures, slow: one
+    host↔device round-trip per client per step.
+  * ``CohortEngine`` (``repro.fed.cohort``) — stack homogeneous clients
+    into leading-axis pytrees and run every per-client op under ``vmap``
+    (one compiled call per round phase for the whole cohort).
+
+Both produce identical ``RoundLog`` streams for the same seed (see
+``tests/test_cohort_parity.py``); ``FedConfig.engine`` selects one.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-
-from typing import TYPE_CHECKING
 
 from repro.common.types import FedConfig
 from repro.core.methods import Method, get_method
-from repro.data.proxy import ProxyData
+
+from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # avoid core <-> fed import cycle at runtime
     from repro.fed.client import Client
@@ -53,46 +64,110 @@ class ExperimentResult:
         return max(r.mean_acc for r in self.rounds) if self.rounds else 0.0
 
 
-def run_round(r: int, clients: List["Client"], server: "Server", method: Method,
+# ---------------------------------------------------------------------------
+# Client engines
+# ---------------------------------------------------------------------------
+
+class LoopEngine:
+    """Reference engine: drives clients one by one (heterogeneous-safe).
+
+    This is the seed implementation of ``run_round`` factored behind the
+    engine interface (one behavioral delta: clients with fewer samples than
+    the batch size now train one short batch per epoch instead of silently
+    skipping local training — see ``repro.fed.batching``); ``CohortEngine``
+    must match its outputs up to float tolerance.
+    """
+
+    def __init__(self, clients: Sequence["Client"]):
+        self.clients = list(clients)
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.clients)
+
+    def learn_dres(self, key) -> None:
+        for i, c in enumerate(self.clients):
+            c.learn_dre(jax.random.fold_in(key, i))
+
+    def local_train_all(self, epochs: int, batch_size: int) -> List[float]:
+        return [c.local_train(epochs, batch_size) for c in self.clients]
+
+    def classwise_means_all(self):
+        return [c.classwise_means() for c in self.clients]
+
+    def proxy_logits_and_masks(self, px, powner):
+        """Returns (logits (C, t, K), masks (C, t)) as numpy arrays."""
+        logits, masks = [], []
+        for c in self.clients:                             # lines 20–25
+            logits.append(np.asarray(c.proxy_logits(px)))
+            masks.append(np.asarray(c.filter_mask(px, powner).mask))
+        return np.stack(logits), np.stack(masks)
+
+    def distill_all(self, px, teacher, weight, epochs: int,
+                    batch_size: int) -> List[float]:
+        return [c.distill(px, teacher, weight, epochs, batch_size)
+                for c in self.clients]
+
+    def distill_private_all(self, teacher_by_class, valid_by_class,
+                            epochs: int, batch_size: int) -> List[float]:
+        out = []
+        for c in self.clients:
+            teacher = teacher_by_class[c.y]                # (n, K)
+            w = valid_by_class[c.y].astype(np.float32)
+            out.append(c.distill(c.x, teacher, w, epochs, batch_size))
+        return out
+
+    def evaluate_all(self, x_test, y_test) -> List[float]:
+        return [c.evaluate(x_test, y_test) for c in self.clients]
+
+
+def as_engine(clients_or_engine, engine: str = "loop"):
+    """Coerce a plain client list (the historical API) into an engine."""
+    if hasattr(clients_or_engine, "local_train_all"):
+        return clients_or_engine
+    if engine == "cohort":
+        from repro.fed.cohort import CohortEngine  # lazy: core must not
+        return CohortEngine(clients_or_engine)     # import fed at load time
+    if engine != "loop":
+        raise ValueError(f"unknown engine {engine!r}; known: loop, cohort")
+    return LoopEngine(clients_or_engine)
+
+
+# ---------------------------------------------------------------------------
+# Protocol
+# ---------------------------------------------------------------------------
+
+def run_round(r: int, clients, server: "Server", method: Method,
               cfg: FedConfig, x_test, y_test) -> RoundLog:
+    engine = as_engine(clients)
     t0 = time.perf_counter()
-    local_losses = [c.local_train(cfg.local_epochs, cfg.batch_size)
-                    for c in clients]
-    distill_losses = []
+    local_losses = engine.local_train_all(cfg.local_epochs, cfg.batch_size)
+    distill_losses: List[float] = []
     id_frac = 1.0
 
     if method.name == "indlearn":
         pass  # no collaboration
     elif method.data_free:
-        means_counts = [c.classwise_means() for c in clients]
+        means_counts = engine.classwise_means_all()
         teacher_by_class, valid_by_class = server.aggregate_classwise(
             means_counts, count_weighted=method.count_weighted)
-        for c in clients:
-            teacher = teacher_by_class[c.y]               # (n, K)
-            w = valid_by_class[c.y].astype(np.float32)
-            distill_losses.append(
-                c.distill(c.x, teacher, w, cfg.distill_epochs, cfg.batch_size))
+        distill_losses = engine.distill_private_all(
+            teacher_by_class, valid_by_class, cfg.distill_epochs,
+            cfg.batch_size)
     else:
         idx = server.select_indices(cfg.proxy_batch)      # line 13
         px = server.proxy.x[idx]
         powner = server.proxy.owner[idx]
-        logits, masks = [], []
-        for c in clients:                                  # lines 20–25
-            logits.append(np.asarray(c.proxy_logits(px)))
-            fs = c.filter_mask(px, powner)
-            masks.append(np.asarray(fs.mask))
-        logits = np.stack(logits)
-        masks = np.stack(masks)
+        logits, masks = engine.proxy_logits_and_masks(px, powner)
         id_frac = float(masks.mean())
         teacher, valid = server.aggregate(                 # line 15
             logits, masks, sharpen=method.sharpen,
             entropy_filter=method.server_filter)
         w = valid.astype(np.float32)
-        for c in clients:                                  # line 16 / 38–43
-            distill_losses.append(
-                c.distill(px, teacher, w, cfg.distill_epochs, cfg.batch_size))
+        distill_losses = engine.distill_all(               # line 16 / 38–43
+            px, teacher, w, cfg.distill_epochs, cfg.batch_size)
 
-    accs = [c.evaluate(x_test, y_test) for c in clients]
+    accs = engine.evaluate_all(x_test, y_test)
     return RoundLog(
         round=r,
         mean_acc=float(np.mean(accs)),
@@ -106,18 +181,18 @@ def run_round(r: int, clients: List["Client"], server: "Server", method: Method,
     )
 
 
-def run_experiment(clients: List["Client"], server: "Server", method_name: str,
+def run_experiment(clients, server: "Server", method_name: str,
                    cfg: FedConfig, x_test, y_test,
                    progress: Optional[Callable[[RoundLog], None]] = None
                    ) -> ExperimentResult:
+    engine = as_engine(clients, cfg.engine)
     method = get_method(method_name)
     logs = []
     key = jax.random.PRNGKey(cfg.seed)
-    for i, c in enumerate(clients):                        # Initialization
-        if method.client_filter != "none":
-            c.learn_dre(jax.random.fold_in(key, i))
+    if method.client_filter != "none":                     # Initialization
+        engine.learn_dres(key)
     for r in range(cfg.rounds):                            # Training phase
-        log = run_round(r, clients, server, method, cfg, x_test, y_test)
+        log = run_round(r, engine, server, method, cfg, x_test, y_test)
         logs.append(log)
         if progress:
             progress(log)

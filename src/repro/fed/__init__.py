@@ -1,3 +1,5 @@
 from repro.fed.client import Client
 from repro.fed.server import Server
+from repro.fed.cohort import CohortEngine
+from repro.fed.batching import epoch_batches, steps_per_epoch
 from repro.fed import simulator

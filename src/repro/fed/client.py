@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core import distill as D
 from repro.core.filtering import FilterStats, two_stage_filter
+from repro.fed.batching import epoch_batches
 from repro.optim.optimizers import Optimizer, apply_updates
 
 
@@ -24,7 +25,7 @@ class Client:
     def __init__(self, cid: int, apply_fn: Callable, params, opt: Optimizer,
                  x: np.ndarray, y: np.ndarray, dre=None, *,
                  num_classes: int = 10, temperature: float = 3.0,
-                 distill_loss: str = "kl", seed: int = 0):
+                 distill_loss: str = "kl", seed: int = 0, arch_key=None):
         self.cid = cid
         self.apply_fn = apply_fn
         self.params = params
@@ -35,6 +36,10 @@ class Client:
         self.dre = dre
         self.num_classes = num_classes
         self.temperature = temperature
+        self.distill_loss = distill_loss
+        # clients sharing an arch_key have identical (init, apply) structure
+        # and may be stacked into one cohort (fed/cohort.py); None = unique
+        self.arch_key = arch_key
         self.rng = np.random.default_rng(seed + 1000 * cid)
         self.bytes_up = 0
         self.bytes_down = 0
@@ -80,9 +85,7 @@ class Client:
         n = len(self.y)
         losses = []
         for _ in range(epochs):
-            perm = self.rng.permutation(n)
-            for s in range(0, n - batch_size + 1, batch_size):
-                idx = perm[s:s + batch_size]
+            for idx in epoch_batches(self.rng.permutation(n), batch_size):
                 self.params, self.opt_state, loss = self._train_step(
                     self.params, self.opt_state,
                     jnp.asarray(self.x[idx]), jnp.asarray(self.y[idx]))
@@ -94,9 +97,7 @@ class Client:
         n = len(proxy_x)
         losses = []
         for _ in range(epochs):
-            perm = self.rng.permutation(n)
-            for s in range(0, n, batch_size):
-                idx = perm[s:s + batch_size]
+            for idx in epoch_batches(self.rng.permutation(n), batch_size):
                 self.params, self.opt_state, loss = self._distill_step(
                     self.params, self.opt_state, jnp.asarray(proxy_x[idx]),
                     jnp.asarray(teacher[idx]), jnp.asarray(weight[idx]))

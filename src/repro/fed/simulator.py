@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.common.types import FedConfig
 from repro.core.methods import get_method
-from repro.core.protocol import ExperimentResult, run_experiment
+from repro.core.protocol import ExperimentResult, as_engine, run_experiment
 from repro.data.partition import partition
 from repro.data.proxy import build_proxy
 from repro.data.synthetic import make_dataset
@@ -34,7 +34,9 @@ def _centroids_for(scenario: str, num_labels: int, num_classes: int) -> int:
 
 def build_experiment(cfg: FedConfig, dataset_name: str = "mnist_feat",
                      *, n_train: int = 5000, n_test: int = 1000,
-                     kulsif: bool = False) -> Tuple[List[Client], Server, np.ndarray, np.ndarray]:
+                     kulsif: bool = False,
+                     mlp_hidden: Tuple[int, ...] = (256, 128)
+                     ) -> Tuple[List[Client], Server, np.ndarray, np.ndarray]:
     ds = make_dataset(dataset_name, n_train=n_train, n_test=n_test,
                       seed=cfg.seed)
     clients_data = partition(np.asarray(ds.x), np.asarray(ds.y),
@@ -50,27 +52,36 @@ def build_experiment(cfg: FedConfig, dataset_name: str = "mnist_feat",
     image_mode = np.asarray(ds.x).ndim == 4
     key = jax.random.PRNGKey(cfg.seed)
     clients: List[Client] = []
+    # one shared optimizer & (in feature mode) one shared apply_fn per
+    # architecture so the cohort engine can stack clients with equal arch_key
+    shared_opt = sgd(cfg.lr)
+    mlp = None
     for cid, cd in enumerate(clients_data):
         key, sub = jax.random.split(key)
         if image_mode:
-            spec, hw, ch = get_client_model(cid, "mnist" if hw_guess(ds.x) == 28 else "cifar10")
+            img_ds = "mnist" if hw_guess(ds.x) == 28 else "cifar10"
+            spec, hw, ch = get_client_model(cid, img_ds)
             params = spec.init(sub, hw, ch)
             apply_fn = spec.apply
+            arch_key = ("cnn", img_ds, cid % 10)       # Tables I/II zoo slot
         else:
-            mlp = MLPClassifier(d_in=np.asarray(ds.x).shape[-1],
-                                num_classes=ds.num_classes)
+            if mlp is None:
+                mlp = MLPClassifier(d_in=np.asarray(ds.x).shape[-1],
+                                    hidden=mlp_hidden,
+                                    num_classes=ds.num_classes)
             params = mlp.init(sub)
             apply_fn = mlp.apply
+            arch_key = ("mlp", *mlp.dims)
         dre = method.make_dre(
             num_centroids=_centroids_for(cfg.scenario, len(cd.labels),
                                          ds.num_classes),
             threshold=cfg.id_threshold)
-        clients.append(Client(cid, apply_fn, params, sgd(cfg.lr),
+        clients.append(Client(cid, apply_fn, params, shared_opt,
                               cd.x, cd.y, dre,
                               num_classes=ds.num_classes,
                               temperature=cfg.temperature,
                               distill_loss=method.distill_loss,
-                              seed=cfg.seed))
+                              seed=cfg.seed, arch_key=arch_key))
     return clients, server, np.asarray(ds.x_test), np.asarray(ds.y_test)
 
 
@@ -78,10 +89,16 @@ def hw_guess(x) -> int:
     return np.asarray(x).shape[1]
 
 
+def build_engine(clients: List[Client], cfg: FedConfig):
+    """Select the execution engine for a client population (cfg.engine)."""
+    return as_engine(clients, cfg.engine)
+
+
 def run(cfg: FedConfig, dataset_name: str = "mnist_feat", *,
         n_train: int = 5000, n_test: int = 1000, progress=None
         ) -> ExperimentResult:
     clients, server, x_test, y_test = build_experiment(
         cfg, dataset_name, n_train=n_train, n_test=n_test)
-    return run_experiment(clients, server, cfg.method, cfg, x_test, y_test,
+    engine = build_engine(clients, cfg)
+    return run_experiment(engine, server, cfg.method, cfg, x_test, y_test,
                           progress=progress)

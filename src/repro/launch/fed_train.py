@@ -19,6 +19,9 @@ def main(argv=None):
     ap.add_argument("--scenario", default="strong",
                     choices=["strong", "weak", "iid"])
     ap.add_argument("--dataset", default="mnist_feat")
+    ap.add_argument("--engine", default="loop", choices=["loop", "cohort"],
+                    help="loop = per-client python loop; cohort = vmapped "
+                         "homogeneous cohorts (fed/cohort.py)")
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--proxy-fraction", type=float, default=0.2)
@@ -42,6 +45,7 @@ def main(argv=None):
         id_threshold=None if args.threshold < 0 else args.threshold,
         lr=args.lr,
         seed=args.seed,
+        engine=args.engine,
     )
 
     def progress(log):

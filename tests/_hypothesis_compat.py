@@ -1,0 +1,114 @@
+"""Deterministic stand-in for `hypothesis` when the real package is absent.
+
+The tier-1 suite uses a small slice of the hypothesis API:
+
+    from hypothesis import given, settings, strategies as st
+    @settings(max_examples=N, deadline=None)
+    @given(a=st.integers(0, 9), b=st.floats(0.1, 5.0), ...)
+
+When `hypothesis` is importable this module is never used (see conftest.py).
+Otherwise conftest installs this module under the name ``hypothesis`` so the
+property tests still run: each ``@given`` test executes ``max_examples``
+examples drawn from a per-test deterministic RNG (seeded from the test's
+qualified name), so failures are reproducible run-to-run. No shrinking, no
+database — install the real package (requirements-dev.txt) for that.
+"""
+from __future__ import annotations
+
+import random
+import types
+import zlib
+
+__version__ = "0.0-repro-shim"
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value, **_kw):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def _booleans():
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def _sampled_from(seq):
+    elems = list(seq)
+    return _Strategy(lambda r: elems[r.randrange(len(elems))])
+
+
+def _lists(elements, min_size=0, max_size=10, **_kw):
+    return _Strategy(
+        lambda r: [elements.example_from(r)
+                   for _ in range(r.randint(min_size, max_size))])
+
+
+def _just(value):
+    return _Strategy(lambda r: value)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.booleans = _booleans
+strategies.sampled_from = _sampled_from
+strategies.lists = _lists
+strategies.just = _just
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class settings:
+    """Decorator form only (the suite never uses profiles)."""
+
+    def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._shim_max_examples = self.max_examples
+        return fn
+
+
+def given(*args, **strat_kwargs):
+    if args:
+        raise TypeError("hypothesis shim supports keyword strategies only")
+
+    def deco(fn):
+        def wrapper(*a, **kw):
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {k: s.example_from(rng) for k, s in strat_kwargs.items()}
+                fn(*a, **drawn, **kw)
+
+        # no functools.wraps: pytest must see the wrapper's empty signature,
+        # not the strategy parameters (they are not fixtures)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+
+
+def assume(condition) -> bool:
+    """Best effort: silently accept (shim draws are unconditioned)."""
+    return bool(condition)

@@ -1,7 +1,22 @@
+import importlib.util
 import os
+import pathlib
+import sys
 
 # tests run on the single real CPU device; only dryrun.py overrides this
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Property tests prefer real hypothesis (requirements-dev.txt); fall back to
+# the deterministic shim so `pytest -q` collects out of the box.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _shim_path = pathlib.Path(__file__).parent / "_hypothesis_compat.py"
+    _spec = importlib.util.spec_from_file_location("hypothesis", _shim_path)
+    _shim = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_shim)
+    sys.modules["hypothesis"] = _shim
+    sys.modules["hypothesis.strategies"] = _shim.strategies
 
 import jax  # noqa: E402
 

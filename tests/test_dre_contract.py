@@ -1,0 +1,129 @@
+"""The DRE contract (paper §III/§V-B) pinned down as properties.
+
+Both estimators expose learn/estimate/is_id. This module asserts the parts
+the round protocol silently relies on:
+
+  * threshold calibration — KMeansDRE's quantile calibration keeps ≈ q of
+    the private data ID, for any q and centroid count;
+  * monotonicity — is_id decisions are monotone in the underlying statistic
+    (distance for KMeans, ratio for KuLSIF): loosening the threshold can
+    only grow the ID set, and estimate() ordering matches is_id ordering;
+  * vmapped ≡ looped — ``kmeans_fit_batched`` (the cohort engine's one-call
+    filter fit) matches per-client ``kmeans_fit`` for identical keys.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dre import KMeansDRE, KuLSIFDRE
+from repro.core.kmeans import kmeans_fit, kmeans_fit_batched, min_dist_to_centroids
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    key = jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    private = jax.random.normal(k1, (240, 12))
+    test = jnp.concatenate([jax.random.normal(k2, (120, 12)),
+                            jax.random.normal(k2, (120, 12)) + 6.0])
+    return private, test
+
+
+# ---------------------------------------------------------------- calibration
+
+@pytest.mark.parametrize("q", [0.8, 0.9, 0.99])
+@pytest.mark.parametrize("k", [1, 3])
+def test_kmeans_threshold_calibration_tracks_quantile(blobs, q, k):
+    private, _ = blobs
+    dre = KMeansDRE(num_centroids=k, calibration_q=q)
+    dre = dre.learn(jax.random.PRNGKey(0), private)
+    frac = float(np.asarray(dre.is_id(private)).mean())
+    assert abs(frac - q) < 0.05, (frac, q)
+
+
+def test_kmeans_fixed_threshold_respected(blobs):
+    private, test = blobs
+    dre = KMeansDRE(num_centroids=1, threshold=2.5)
+    dre = dre.learn(jax.random.PRNGKey(0), private)
+    assert dre.threshold == 2.5
+    d = np.asarray(dre.distances(test))
+    np.testing.assert_array_equal(np.asarray(dre.is_id(test)), d <= 2.5)
+
+
+# --------------------------------------------------------------- monotonicity
+
+def test_kmeans_is_id_monotone_in_threshold(blobs):
+    private, test = blobs
+    dre = KMeansDRE(num_centroids=2).learn(jax.random.PRNGKey(1), private)
+    masks = []
+    for thr in (0.5, 2.0, 8.0, 32.0):
+        masks.append(np.asarray(
+            dataclasses.replace(dre, threshold=thr).is_id(test)))
+    for tight, loose in zip(masks, masks[1:]):
+        assert np.all(loose[tight])           # looser threshold ⊇ tighter
+    assert masks[-1].sum() > masks[0].sum()
+
+
+def test_kmeans_estimate_orders_like_distance(blobs):
+    private, test = blobs
+    dre = KMeansDRE(num_centroids=2).learn(jax.random.PRNGKey(1), private)
+    d = np.asarray(dre.distances(test))
+    est = np.asarray(dre.estimate(test))
+    np.testing.assert_allclose(est, -d, rtol=1e-6)
+    # every ID sample's estimate >= every OOD sample's estimate boundary
+    mask = np.asarray(dre.is_id(test))
+    assert mask.any() and (~mask).any()
+    assert est[mask].min() >= est[~mask].max() - 1e-6
+
+
+def test_kulsif_is_id_monotone_in_threshold(blobs):
+    private, test = blobs
+    dre = KuLSIFDRE(sigma=3.0, lam=0.1, num_aux=96)
+    dre = dre.learn(jax.random.PRNGKey(2), private)
+    counts = []
+    for thr in (-1e9, 0.0, 0.5, 1e9):
+        counts.append(int(np.asarray(
+            dataclasses.replace(dre, threshold=thr).is_id(test)).sum()))
+    assert counts[0] == len(test) and counts[-1] == 0
+    assert all(a >= b for a, b in zip(counts, counts[1:]))
+
+
+def test_kulsif_ratio_higher_on_id(blobs):
+    private, test = blobs
+    dre = KuLSIFDRE(sigma=3.0, lam=0.1, num_aux=96)
+    dre = dre.learn(jax.random.PRNGKey(2), private)
+    r = np.asarray(dre.estimate(test))
+    assert r[:120].mean() > r[120:].mean()    # first half is in-distribution
+
+
+# --------------------------------------------------------- vmapped vs looped
+
+def test_kmeans_fit_batched_matches_loop():
+    key = jax.random.PRNGKey(3)
+    C, n, d, k = 4, 96, 6, 3
+    keys = jax.random.split(key, C)
+    xs = jax.random.normal(jax.random.fold_in(key, 99), (C, n, d)) * 2.0
+    batched = kmeans_fit_batched(keys, xs, k, 25)
+    for i in range(C):
+        single = kmeans_fit(keys[i], xs[i], k, 25)
+        np.testing.assert_allclose(np.asarray(batched.centroids[i]),
+                                   np.asarray(single.centroids),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(batched.assignments[i]),
+                                      np.asarray(single.assignments))
+        np.testing.assert_allclose(float(batched.inertia[i]),
+                                   float(single.inertia), rtol=1e-4)
+
+
+def test_vmapped_min_dist_matches_loop():
+    key = jax.random.PRNGKey(4)
+    xs = jax.random.normal(key, (3, 50, 5))
+    cents = jax.random.normal(jax.random.fold_in(key, 1), (3, 2, 5))
+    batched = jax.vmap(min_dist_to_centroids)(xs, cents)
+    for i in range(3):
+        np.testing.assert_allclose(np.asarray(batched[i]),
+                                   np.asarray(min_dist_to_centroids(xs[i], cents[i])),
+                                   rtol=1e-5, atol=1e-6)
