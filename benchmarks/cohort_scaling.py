@@ -10,10 +10,25 @@ round phase as one vmapped call. This benchmark measures one federated round
     PYTHONPATH=src python benchmarks/cohort_scaling.py --clients 8 32 --rounds 2
 
 Acceptance gate (ISSUE 1): cohort ≥ 5× lower per-round wall-clock at C=128.
+
+Device-count sweep (ISSUE 2): ``--devices 1 2 4`` re-runs the cohort engine
+at fixed C with the client axis mesh-sharded over N emulated host devices
+(each count in a fresh subprocess — jax fixes the device count at init — via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) and records the
+sweep to ``BENCH_cohort_mesh.json`` at the repo root:
+
+    PYTHONPATH=src python benchmarks/cohort_scaling.py --devices 1 2 4
+
+Wall-clock decreases while the device count stays within the host's
+physical cores; oversubscribed counts plateau.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -32,10 +47,12 @@ MLP_HIDDEN = (64,)
 
 
 def bench_engine(engine: str, num_clients: int, rounds: int,
-                 seed: int = 0) -> dict:
+                 seed: int = 0, num_devices: int = 0) -> dict:
+    rounds = max(rounds, 1)  # at least one timed round after the warmup
     cfg = FedConfig(num_clients=num_clients, rounds=rounds, method="edgefd",
                     scenario="iid", proxy_batch=256, batch_size=32,
-                    lr=1e-2, seed=seed, engine=engine)
+                    lr=1e-2, seed=seed, engine=engine,
+                    num_devices=num_devices)
     clients, server, x_test, y_test = simulator.build_experiment(
         cfg, "mnist_feat", n_train=SAMPLES_PER_CLIENT * num_clients,
         n_test=512, mlp_hidden=MLP_HIDDEN)
@@ -53,21 +70,105 @@ def bench_engine(engine: str, num_clients: int, rounds: int,
         log = run_round(r, eng, server, method, cfg, x_test, y_test)
         times.append(log.wall_s)
     return {"engine": engine, "clients": num_clients,
+            "devices": num_devices,
             "warmup_s": warm_s, "round_s": float(np.median(times)),
             "final_acc": log.mean_acc}
 
 
+def device_sweep(devices, clients, rounds: int) -> list:
+    """Re-run the mesh-sharded cohort engine once per (C, device count).
+
+    Each device count runs in a fresh subprocess with
+    ``--xla_force_host_platform_device_count`` set before jax init (the
+    count is frozen at init, so one process cannot sweep it)."""
+    bad = [d for d in devices if d < 1]
+    if bad:
+        raise SystemExit(
+            f"--devices entries must be >= 1 (got {bad}); the sweep forces "
+            "that many host devices per subprocess — devices=1 IS the "
+            "unsharded-comparable baseline (a 1-device mesh)")
+    rows = []
+    print(f"{'C':>5} {'devices':>8} {'warmup_s':>9} {'round_s':>9} "
+          f"{'speedup':>8}")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for c in clients:
+        base_s = None
+        for d in devices:
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (
+                env.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={d}")
+            env.setdefault("JAX_PLATFORMS", "cpu")
+            env["PYTHONPATH"] = os.pathsep.join(
+                [root, os.path.join(root, "src"), env.get("PYTHONPATH", "")])
+            res = subprocess.run(
+                [sys.executable, os.path.abspath(__file__),
+                 "--_forced-devices", str(d), "--clients", str(c),
+                 "--rounds", str(rounds)],
+                env=env, capture_output=True, text=True,
+                timeout=900)  # a wedged child names its (C, d) cell loudly
+            if res.returncode != 0:
+                raise RuntimeError(
+                    f"device sweep child (C={c}, devices={d}) failed:\n"
+                    f"{res.stdout}\n{res.stderr}")
+            row = next(json.loads(line[4:])
+                       for line in res.stdout.splitlines()
+                       if line.startswith("ROW "))
+            rows.append(row)
+            base_s = base_s if base_s is not None else row["round_s"]
+            speed = f"{base_s / row['round_s']:7.2f}x" if base_s else ""
+            print(f"{c:>5} {d:>8} {row['warmup_s']:9.2f} "
+                  f"{row['round_s']:9.3f} {speed:>8}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--clients", type=int, nargs="+",
-                    default=[8, 32, 128, 512])
+    ap.add_argument("--clients", type=int, nargs="+", default=None)
     ap.add_argument("--rounds", type=int, default=1,
                     help="timed rounds per configuration (after 1 warmup)")
     ap.add_argument("--skip-loop-above", type=int, default=10_000,
                     help="skip the loop engine beyond this client count "
                          "(it is the slow thing being measured)")
+    ap.add_argument("--devices", type=int, nargs="+", default=None,
+                    help="mesh-device sweep mode: cohort engine at fixed C "
+                         "(default 128), one emulated-host-device count per "
+                         "subprocess; writes BENCH_cohort_mesh.json")
+    ap.add_argument("--out", default=None,
+                    help="device-sweep output path (default: "
+                         "<repo>/BENCH_cohort_mesh.json)")
+    ap.add_argument("--_forced-devices", type=int, default=0,
+                    dest="forced_devices", help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
 
+    if args.forced_devices:
+        # device-sweep child: this process was launched with the forced
+        # host-device count already in XLA_FLAGS
+        clients = (args.clients or [128])[0]
+        row = bench_engine("cohort", clients, max(args.rounds, 3),
+                           num_devices=args.forced_devices)
+        print("ROW " + json.dumps(row))
+        return [row]
+
+    if args.devices is not None:
+        clients = args.clients or [128]
+        rows = device_sweep(args.devices, clients, max(args.rounds, 3))
+        out = args.out or os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_cohort_mesh.json")
+        with open(out, "w") as f:
+            json.dump({"benchmark": "cohort_mesh_device_sweep",
+                       "clients": clients,
+                       "host_cpu_count": os.cpu_count(),
+                       "note": "emulated host devices via XLA_FLAGS="
+                               "--xla_force_host_platform_device_count; "
+                               "wall-clock decreases while devices <= "
+                               "physical cores",
+                       "rows": rows}, f, indent=2)
+        print(f"saved {out}")
+        return rows
+
+    args.clients = args.clients or [8, 32, 128, 512]
     rows = []
     print(f"{'C':>5} {'engine':>7} {'warmup_s':>9} {'round_s':>9} {'speedup':>8}")
     for c in args.clients:

@@ -16,6 +16,13 @@ cfg = FedConfig(
     id_threshold=None,        # None => per-client quantile calibration
     lr=1e-2,
     engine="cohort",          # vmapped clients; "loop" = same results, 1-by-1
+    # num_devices=-1 shards the cohort client axis over a 1-D device mesh
+    # (all visible jax devices; 0 = unsharded). Same round logs, one
+    # device-parallel call per phase. The CLI spells it
+    #   python -m repro.launch.fed_train --engine cohort --devices -1
+    # CPU-only hosts emulate an N-device host by setting
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N before jax loads.
+    num_devices=0,
 )
 
 result = simulator.run(cfg, dataset_name="mnist_feat",

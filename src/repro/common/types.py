@@ -146,3 +146,9 @@ class FedConfig:
     # "cohort" stacks homogeneous-architecture clients and vmaps every round
     # phase (repro.fed.cohort) — same round logs, far fewer dispatches.
     engine: str = "loop"
+    # device mesh over the cohort client axis (engine="cohort" only):
+    # 0 = unsharded (default), -1 = all visible jax devices, N > 0 = a 1-D
+    # mesh over exactly N devices (repro.fed.mesh). CPU hosts emulate N
+    # devices with XLA_FLAGS=--xla_force_host_platform_device_count=N.
+    num_devices: int = 0
+    mesh_axis: str = "clients"

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, List, Optional, Sequence
 
 import jax
@@ -121,16 +122,46 @@ class LoopEngine:
         return [c.evaluate(x_test, y_test) for c in self.clients]
 
 
-def as_engine(clients_or_engine, engine: str = "loop"):
-    """Coerce a plain client list (the historical API) into an engine."""
+def as_engine(clients_or_engine, engine: str = "loop", *,
+              num_devices: int = 0, mesh_axis: str = "clients"):
+    """Coerce a plain client list (the historical API) into an engine.
+
+    ``num_devices``/``mesh_axis`` build the cohort engine's 1-D client mesh
+    (``repro.fed.mesh``): 0 = unsharded, -1 = all devices, N > 0 = exactly N.
+    """
     if hasattr(clients_or_engine, "local_train_all"):
+        if num_devices and getattr(clients_or_engine, "mesh", None) is None:
+            # a pre-built engine runs as constructed; say so instead of
+            # letting the config silently promise a mesh that isn't there
+            warnings.warn(
+                f"num_devices={num_devices} requested but a pre-built "
+                "engine without a device mesh was supplied; it will run "
+                "as constructed — build it via simulator.build_engine(...) "
+                "or pass the raw client list to honor the config")
         return clients_or_engine
     if engine == "cohort":
-        from repro.fed.cohort import CohortEngine  # lazy: core must not
-        return CohortEngine(clients_or_engine)     # import fed at load time
+        # lazy imports: core must not import fed at load time
+        from repro.fed.cohort import CohortEngine
+        from repro.fed.mesh import build_client_mesh
+        mesh = build_client_mesh(num_devices, mesh_axis)
+        return CohortEngine(clients_or_engine, mesh=mesh, mesh_axis=mesh_axis)
     if engine != "loop":
         raise ValueError(f"unknown engine {engine!r}; known: loop, cohort")
+    if num_devices:
+        raise ValueError("num_devices requires engine='cohort' (the loop "
+                         "engine drives one client at a time)")
     return LoopEngine(clients_or_engine)
+
+
+def engine_from_config(clients_or_engine, cfg: FedConfig):
+    """``as_engine`` with every engine-relevant ``FedConfig`` field applied.
+
+    The single cfg→engine mapping — ``run_round``, ``run_experiment`` and
+    ``simulator.build_engine`` all route through here so a new
+    engine-relevant config field cannot be wired into one and not the
+    others."""
+    return as_engine(clients_or_engine, cfg.engine,
+                     num_devices=cfg.num_devices, mesh_axis=cfg.mesh_axis)
 
 
 # ---------------------------------------------------------------------------
@@ -139,7 +170,14 @@ def as_engine(clients_or_engine, engine: str = "loop"):
 
 def run_round(r: int, clients, server: "Server", method: Method,
               cfg: FedConfig, x_test, y_test) -> RoundLog:
-    engine = as_engine(clients)
+    # a raw client list must honor cfg.engine — dropping it silently ran
+    # the slow loop engine under engine="cohort". An engine built here dies
+    # with this call, so its state must flow back to the Client objects
+    # below. NOTE: that also means a raw list re-stacks and re-jits the
+    # cohort phases every round — multi-round callers should build the
+    # engine once (simulator.build_engine / run_experiment) and pass it in.
+    engine = engine_from_config(clients, cfg)
+    transient = engine is not clients
     t0 = time.perf_counter()
     local_losses = engine.local_train_all(cfg.local_epochs, cfg.batch_size)
     distill_losses: List[float] = []
@@ -168,6 +206,11 @@ def run_round(r: int, clients, server: "Server", method: Method,
             px, teacher, w, cfg.distill_epochs, cfg.batch_size)
 
     accs = engine.evaluate_all(x_test, y_test)
+    if transient and hasattr(engine, "sync_to_clients"):
+        # engines that train on stacked device state (CohortEngine) must
+        # write params/opt-state back before being discarded, or raw-list
+        # callers would silently lose every round's training
+        engine.sync_to_clients()
     return RoundLog(
         round=r,
         mean_acc=float(np.mean(accs)),
@@ -185,7 +228,7 @@ def run_experiment(clients, server: "Server", method_name: str,
                    cfg: FedConfig, x_test, y_test,
                    progress: Optional[Callable[[RoundLog], None]] = None
                    ) -> ExperimentResult:
-    engine = as_engine(clients, cfg.engine)
+    engine = engine_from_config(clients, cfg)
     method = get_method(method_name)
     logs = []
     key = jax.random.PRNGKey(cfg.seed)
@@ -196,5 +239,9 @@ def run_experiment(clients, server: "Server", method_name: str,
         logs.append(log)
         if progress:
             progress(log)
+    if engine is not clients and hasattr(engine, "sync_to_clients"):
+        # raw-list callers hold only the Client objects — an engine built
+        # here must write its trained stacked state back before vanishing
+        engine.sync_to_clients()
     return ExperimentResult(method=method_name, scenario=cfg.scenario,
                             rounds=logs)

@@ -28,6 +28,14 @@ def partition(x, y, *, num_clients: int, num_classes: int, scenario: str,
               labels_per_client: int = 3, seed: int = 0) -> List[ClientData]:
     x = np.asarray(x)
     y = np.asarray(y)
+    if scenario == "weak":
+        # rng.choice(..., replace=False) below would die with an opaque
+        # numpy error ("Cannot take a larger sample...") — fail legibly
+        if not 1 <= labels_per_client <= num_classes:
+            raise ValueError(
+                f"labels_per_client={labels_per_client} must be in "
+                f"[1, num_classes={num_classes}] for the weak non-IID "
+                "partition (each client draws that many distinct labels)")
     rng = np.random.default_rng(seed)
     idx_by_label = _by_label(y, num_classes)
     out: List[ClientData] = []

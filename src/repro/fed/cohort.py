@@ -28,6 +28,21 @@ Clients with unequal private-set sizes are padded to the cohort maximum;
 padded samples carry zero loss weight and padded steps are no-ops
 (params/opt-state gated by a validity flag), so results match the loop
 engine exactly (``tests/test_cohort_parity.py``).
+
+Device-mesh sharding
+--------------------
+Pass a 1-D ``Mesh`` (``repro.fed.mesh.build_client_mesh``) and every
+stacked pytree is placed with its client axis split across the mesh
+(``NamedSharding``), so each compiled round phase runs device-parallel
+with zero cross-device collectives (per-client work is independent; the
+server's cross-client aggregation happens on host). Cohorts whose client
+count is not a multiple of the mesh size are padded with *dummy clients*
+whose step-validity flags are all False — the same ``_where_tree`` gating
+that freezes short clients makes every dummy step a no-op — and dummy
+rows are sliced off before any result leaves the engine. Outputs of the
+jitted phases are pinned back to the client axis via the logical-rules
+machinery in ``repro.models.sharding`` (logical axis ``"clients"``), so
+params/opt-state never decay to a single device between rounds.
 """
 from __future__ import annotations
 
@@ -43,6 +58,9 @@ from repro.core.dre import KMeansDRE, KuLSIFDRE, rbf_kernel
 from repro.core.kmeans import kmeans_fit_batched, min_dist_to_centroids
 from repro.fed.batching import padded_epoch_plan, steps_per_epoch
 from repro.fed.client import Client
+from repro.fed.mesh import (DEFAULT_CLIENT_AXIS, padded_size, replicate,
+                            shard_clients)
+from repro.models.sharding import constrain, logical_rules
 from repro.optim.optimizers import apply_updates
 
 
@@ -61,9 +79,15 @@ def _where_tree(flag, new, old):
 class _Cohort:
     """One homogeneous architecture group: stacked state + jitted round ops."""
 
-    def __init__(self, members: Sequence[Client], positions: Sequence[int]):
+    def __init__(self, members: Sequence[Client], positions: Sequence[int],
+                 mesh=None, mesh_axis: str = DEFAULT_CLIENT_AXIS):
         self.members = list(members)
         self.positions = list(positions)     # index into the global client list
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        # client axis after padding to a multiple of the mesh size; rows
+        # [len(members):c_pad] are validity-gated dummy clients
+        self.c_pad = padded_size(len(members), mesh)
         c0 = members[0]
         # arch_key only contracts identical (init, apply) structure; the
         # training hyperparameters below are baked into the cohort's jitted
@@ -76,6 +100,15 @@ class _Cohort:
                     f"cohort members {c0.cid} and {c.cid} share arch_key "
                     f"{c0.arch_key!r} but hold distinct Optimizer instances; "
                     "construct one optimizer and pass it to every member "
+                    "(or give them distinct arch_keys)")
+            if c.apply_fn != c0.apply_fn:
+                # bound-method equality compares (__self__, __func__), so
+                # clients sharing one model spec / MLP instance still pass
+                raise ValueError(
+                    f"cohort members {c0.cid} and {c.cid} share arch_key "
+                    f"{c0.arch_key!r} but hold different apply_fns; the "
+                    "cohort would silently run member 0's network for "
+                    "everyone — share one model object per arch_key "
                     "(or give them distinct arch_keys)")
             for attr in ("temperature", "distill_loss", "num_classes"):
                 if getattr(c, attr) != getattr(c0, attr):
@@ -91,31 +124,82 @@ class _Cohort:
 
         self.n = np.array([len(c.y) for c in members], np.int64)
         n_max = int(self.n.max())
-        x_pad = np.zeros((len(members), n_max, *c0.x.shape[1:]),
+        x_pad = np.zeros((self.c_pad, n_max, *c0.x.shape[1:]),
                          np.asarray(c0.x).dtype)
-        y_pad = np.zeros((len(members), n_max), np.asarray(c0.y).dtype)
-        m_pad = np.zeros((len(members), n_max), np.float32)
+        y_pad = np.zeros((self.c_pad, n_max), np.asarray(c0.y).dtype)
+        m_pad = np.zeros((self.c_pad, n_max), np.float32)
         for i, c in enumerate(members):
             x_pad[i, : self.n[i]] = c.x
             y_pad[i, : self.n[i]] = c.y
             m_pad[i, : self.n[i]] = 1.0
-        self.x = jnp.asarray(x_pad)
-        self.y = jnp.asarray(y_pad)
-        self.sample_mask = jnp.asarray(m_pad)
+        self.x = self._put_c(x_pad)
+        self.y = self._put_c(y_pad)
+        self.sample_mask = self._put_c(m_pad)
 
-        self.params = _stack_trees([c.params for c in members])
-        self.opt_state = _stack_trees([c.opt_state for c in members])
+        # dummy rows clone member 0's state; their steps never validate, so
+        # the clone is inert ballast that keeps the client axis mesh-divisible
+        stand_ins = [members[0]] * (self.c_pad - len(members))
+        self.params = self._put_c(
+            _stack_trees([c.params for c in [*members, *stand_ins]]))
+        self.opt_state = self._put_c(
+            _stack_trees([c.opt_state for c in [*members, *stand_ins]]))
 
-        # filter state (filled by learn_dres)
+        # filter state (filled by learn_dres, or packed right away when the
+        # clients arrive with already-learned DREs — e.g. the transient
+        # engine run_round builds per call from a raw client list)
         self.filter_kind = "none"
         self._filter_state: Dict[str, jax.Array] = {}
 
         self._build_fns()
+        self._pack_learned_filter_state()
+
+    # ----------------------------------------------------- mesh placement
+    def _put_c(self, tree):
+        """Place leaves with the leading client axis split over the mesh."""
+        return shard_clients(jax.tree.map(jnp.asarray, tree),
+                             self.mesh, self.mesh_axis)
+
+    def _put_rep(self, tree):
+        """Place leaves replicated on every mesh device (shared inputs)."""
+        return replicate(jax.tree.map(jnp.asarray, tree), self.mesh)
+
+    def _pad_rows(self, arr, fill=None):
+        """Pad per-member stacked rows (leading axis C) out to ``c_pad``.
+
+        ``fill=None`` repeats the first row (values are discarded — dummy
+        rows only exist to keep the axis mesh-divisible); a scalar ``fill``
+        writes that value (e.g. 1.0 where a dummy row would divide by n)."""
+        arr = jnp.asarray(arr)
+        extra = self.c_pad - arr.shape[0]
+        if extra == 0:
+            return arr
+        if fill is None:
+            pad = jnp.tile(arr[:1], (extra,) + (1,) * (arr.ndim - 1))
+        else:
+            pad = jnp.full((extra, *arr.shape[1:]), fill, arr.dtype)
+        return jnp.concatenate([arr, pad])
+
+    def _ctx(self):
+        """Logical-rules scope for every jitted call: inside it the logical
+        ``"clients"`` axis resolves to this cohort's mesh axis (and nothing
+        else resolves at all), so traces pin outputs to the client mesh and
+        never pick up an outer launcher's model-parallel rules."""
+        return logical_rules({"clients": self.mesh_axis},
+                             self.mesh) if self.mesh is not None \
+            else logical_rules(None, None)
 
     # ------------------------------------------------------------- jitted ops
     def _build_fns(self):
         apply_fn, opt = self.apply_fn, self.opt
         temp, loss_kind, k_cls = self.temperature, self.loss_kind, self.num_classes
+
+        def pinned(fn):
+            """jit(fn) with every output pinned to the client axis (no-op
+            when traced without a mesh in scope — see ``_ctx``)."""
+            def wrapped(*args):
+                return jax.tree.map(lambda leaf: constrain(leaf, "clients"),
+                                    fn(*args))
+            return jax.jit(wrapped)
 
         def scan_steps(batch_loss):
             """Shared scan skeleton: grad step + validity gating; the three
@@ -181,16 +265,29 @@ class _Cohort:
             d = min_dist_to_centroids(pxf, cents)
             return (owner == cid) | (d <= thr)
 
-        self._train = jax.jit(jax.vmap(train_chunk))
-        self._distill = jax.jit(
+        def eval_chunk(params, xb, yb, mb):
+            """Fixed-shape eval: (nb, B, ...) batches, padded tail masked by
+            ``mb`` — one compile regardless of ``len(y_test) % B``."""
+            def body(correct, inp):
+                x1, y1, m1 = inp
+                pred = jnp.argmax(apply_fn(params, x1, False), -1)
+                return correct + jnp.sum((pred == y1) * m1), None
+            correct, _ = jax.lax.scan(body, jnp.zeros((), jnp.int32),
+                                      (xb, yb, mb))
+            return correct
+
+        self._train = pinned(jax.vmap(train_chunk))
+        self._distill = pinned(
             jax.vmap(distill_chunk, in_axes=(0, 0, None, None, 0, 0, 0)))
-        self._distill_private = jax.jit(
+        self._distill_private = pinned(
             jax.vmap(distill_private_chunk,
                      in_axes=(0, 0, 0, 0, None, None, 0, 0, 0)))
-        self._predict = jax.jit(
+        self._predict = pinned(
             jax.vmap(lambda p, xb: apply_fn(p, xb, False), in_axes=(0, None)))
-        self._classwise = jax.jit(jax.vmap(classwise_chunk))
-        self._kmeans_masks = jax.jit(
+        self._eval = pinned(
+            jax.vmap(eval_chunk, in_axes=(0, None, None, None)))
+        self._classwise = pinned(jax.vmap(classwise_chunk))
+        self._kmeans_masks = pinned(
             jax.vmap(kmeans_mask_chunk, in_axes=(0, 0, 0, None, None)))
 
         def kulsif_mask_chunk(alpha, aux, priv, n, thr, cid, sigma, lam,
@@ -200,89 +297,160 @@ class _Cohort:
             r = k_ta @ alpha + jnp.sum(k_tp, axis=1) / (lam * n)
             return (owner == cid) | (r >= thr)
 
-        self._kulsif_masks = jax.jit(
+        self._kulsif_masks = pinned(
             jax.vmap(kulsif_mask_chunk,
                      in_axes=(0, 0, 0, 0, 0, 0, None, None, None, None)))
 
     # -------------------------------------------------------------- DRE learn
+    @staticmethod
+    def _check_kulsif_uniform(dres) -> None:
+        # sigma/lam are baked into the vmapped ratio evaluation once,
+        # so they must agree across members (thresholds are per-client)
+        for d in dres[1:]:
+            if (d.sigma, d.lam) != (dres[0].sigma, dres[0].lam):
+                raise ValueError(
+                    f"cohort KuLSIF DREs disagree on (sigma, lam): "
+                    f"{(dres[0].sigma, dres[0].lam)} vs "
+                    f"{(d.sigma, d.lam)}; give such clients distinct "
+                    "arch_keys")
+
     def learn_dres(self, key) -> None:
-        if self.members[0].dre is None:
+        if all(c.dre is None for c in self.members):
             return
         keys = [jax.random.fold_in(key, pos) for pos in self.positions]
         dres = [c.dre for c in self.members]
 
-        if isinstance(dres[0], KMeansDRE):
+        if all(isinstance(d, KMeansDRE) for d in dres):
             ks = {d.num_centroids for d in dres}
+            # the vmapped fit bakes ONE (threshold, calibration_q, max_iter)
+            # into the whole batch, so every fit hyperparameter must agree —
+            # anything less silently mis-calibrates the odd member out
             uniform = (len(set(self.n)) == 1 and len(ks) == 1
-                       and len({d.threshold for d in dres}) == 1)
+                       and len({d.threshold for d in dres}) == 1
+                       and len({d.calibration_q for d in dres}) == 1
+                       and len({d.max_iter for d in dres}) == 1)
             if uniform:
-                # the vmapped learn path: every filter fit in one call
+                # the vmapped learn path: every filter fit in one call,
+                # device-parallel over the (padded) client axis; dummy rows
+                # fit on all-zero features and are never read back
                 k = ks.pop()
-                feats = self.x.reshape(len(self.members), int(self.n[0]), -1)
-                res = kmeans_fit_batched(jnp.stack(keys), feats, k,
-                                         dres[0].max_iter)
-                if dres[0].threshold is None:
-                    dmin = jax.vmap(min_dist_to_centroids)(feats, res.centroids)
-                    thrs = jnp.quantile(dmin, dres[0].calibration_q, axis=1)
-                else:
-                    thrs = jnp.full((len(self.members),), dres[0].threshold)
+                feats = self.x.reshape(self.c_pad, int(self.n[0]), -1)
+                with self._ctx():
+                    res = kmeans_fit_batched(
+                        self._put_c(self._pad_rows(jnp.stack(keys))),
+                        feats, k, dres[0].max_iter)
+                    if dres[0].threshold is None:
+                        dmin = jax.vmap(min_dist_to_centroids)(feats,
+                                                               res.centroids)
+                        thrs = jnp.quantile(dmin, dres[0].calibration_q,
+                                            axis=1)
+                    else:
+                        thrs = jnp.full((self.c_pad,), dres[0].threshold)
+                # pull centroids to host: rows of a mesh-sharded fit live on
+                # different devices, and jnp.stack in the packing step
+                # rejects mixed committed devices
+                cents_host = np.asarray(res.centroids)
                 for i, c in enumerate(self.members):
                     c.dre = dataclasses.replace(
-                        c.dre, centroids=res.centroids[i],
+                        c.dre, centroids=jnp.asarray(cents_host[i]),
                         threshold=float(thrs[i]))
             else:
                 for c, kk in zip(self.members, keys):
                     c.learn_dre(kk)
+        else:
+            # per-client learn (learn_dre no-ops on dre=None); KuLSIF
+            # uniformity must fail before any state is mutated
+            if all(isinstance(d, KuLSIFDRE) for d in dres):
+                self._check_kulsif_uniform(dres)
+            for c, kk in zip(self.members, keys):
+                c.learn_dre(kk)
+        self._pack_filter_state()
+
+    def _pack_filter_state(self) -> None:
+        """Stack the members' *learned* DREs into vmappable filter state."""
+        dres = [c.dre for c in self.members]
+        if all(isinstance(d, KMeansDRE) for d in dres):
             kmax = max(c.dre.centroids.shape[0] for c in self.members)
             cents = []
             for c in self.members:
-                cc = c.dre.centroids
+                cc = jnp.asarray(c.dre.centroids)
                 if cc.shape[0] < kmax:  # pad by repeating the first centroid:
                     pad = jnp.tile(cc[:1], (kmax - cc.shape[0], 1))
                     cc = jnp.concatenate([cc, pad])  # min-distance unchanged
                 cents.append(cc)
             self.filter_kind = "kmeans"
             self._filter_state = {
-                "centroids": jnp.stack(cents),
-                "thresholds": jnp.asarray([c.dre.threshold
-                                           for c in self.members],
-                                          jnp.float32),
+                "centroids": self._put_c(self._pad_rows(jnp.stack(cents))),
+                "thresholds": self._put_c(self._pad_rows(
+                    jnp.asarray([c.dre.threshold for c in self.members],
+                                jnp.float32))),
             }
-        elif isinstance(dres[0], KuLSIFDRE):
-            # sigma/lam are baked into the vmapped ratio evaluation once,
-            # so they must agree across members (thresholds are per-client)
-            for d in dres[1:]:
-                if (d.sigma, d.lam) != (dres[0].sigma, dres[0].lam):
-                    raise ValueError(
-                        f"cohort KuLSIF DREs disagree on (sigma, lam): "
-                        f"{(dres[0].sigma, dres[0].lam)} vs "
-                        f"{(d.sigma, d.lam)}; give such clients distinct "
-                        "arch_keys")
-            for c, kk in zip(self.members, keys):
-                c.learn_dre(kk)
+        elif all(isinstance(d, KuLSIFDRE) for d in dres):
+            self._check_kulsif_uniform(dres)
             n_max = int(self.n.max())
             d = self.members[0].dre.private.shape[1]
             # pad private sets with a far-away sentinel: its RBF kernel mass
-            # underflows to exactly 0, so padded rows contribute nothing
-            priv = np.full((len(self.members), n_max, d), 1e6, np.float32)
+            # underflows to exactly 0, so padded rows contribute nothing —
+            # dummy-client rows are entirely sentinel for the same reason.
+            # The underflow needs (1e6)^2/(2 sigma^2) >> 88 (float32), so
+            # refuse sigmas anywhere near that scale when padding exists
+            padded = (self.c_pad > len(self.members)
+                      or int(self.n.min()) < n_max)
+            if padded and dres[0].sigma > 1e4:
+                raise ValueError(
+                    f"KuLSIF sentinel padding requires sigma <= 1e4 so the "
+                    f"pad rows' RBF mass underflows to exactly 0; got "
+                    f"sigma={dres[0].sigma!r} with a padded cohort — use "
+                    "equal private-set sizes and a mesh-divisible client "
+                    "count, or give such clients distinct arch_keys")
+            priv = np.full((self.c_pad, n_max, d), 1e6, np.float32)
             for i, c in enumerate(self.members):
                 priv[i, : self.n[i]] = np.asarray(c.dre.private)
             self.filter_kind = "kulsif"
             self._filter_state = {
-                "alpha": jnp.stack([c.dre.alpha for c in self.members]),
-                "aux": jnp.stack([c.dre.aux for c in self.members]),
-                "private": jnp.asarray(priv),
-                "n": jnp.asarray(self.n, jnp.float32),
-                "thresholds": jnp.asarray([c.dre.threshold
-                                           for c in self.members],
-                                          jnp.float32),
+                "alpha": self._put_c(self._pad_rows(
+                    jnp.stack([jnp.asarray(c.dre.alpha)
+                               for c in self.members]))),
+                "aux": self._put_c(self._pad_rows(
+                    jnp.stack([jnp.asarray(c.dre.aux)
+                               for c in self.members]))),
+                "private": self._put_c(priv),
+                # dummy rows divide by n — pad with 1.0, never 0
+                "n": self._put_c(self._pad_rows(
+                    jnp.asarray(self.n, jnp.float32), fill=1.0)),
+                "thresholds": self._put_c(self._pad_rows(
+                    jnp.asarray([c.dre.threshold for c in self.members],
+                                jnp.float32))),
                 "sigma": jnp.float32(dres[0].sigma),
                 "lam": jnp.float32(dres[0].lam),
             }
-        else:  # unknown estimator: fall back to per-client mask calls
-            for c, kk in zip(self.members, keys):
-                c.learn_dre(kk)
+        else:  # unknown or mixed estimators: per-client mask calls
             self.filter_kind = "loop"
+
+    def _pack_learned_filter_state(self) -> None:
+        """Adopt DREs the clients *already* learned (a transient engine —
+        run_round builds one per call from a raw client list — must filter
+        exactly like the long-lived engine whose learn_dres ran)."""
+        d0 = self.members[0].dre
+        if isinstance(d0, KMeansDRE):
+            learned = all(isinstance(c.dre, KMeansDRE)
+                          and c.dre.centroids is not None
+                          for c in self.members)
+        elif isinstance(d0, KuLSIFDRE):
+            learned = all(isinstance(c.dre, KuLSIFDRE)
+                          and c.dre.alpha is not None
+                          for c in self.members)
+        elif d0 is not None:
+            # unknown estimator: "learned" is undecidable here, so take the
+            # per-client mask fallback unconditionally — exactly what the
+            # loop engine does with the same clients (unlearned ones fail
+            # identically there)
+            self.filter_kind = "loop"
+            return
+        else:
+            learned = False  # no DRE: nothing to adopt
+        if learned:
+            self._pack_filter_state()
 
     # ----------------------------------------------------------- round phases
     def _plan(self, draw_n: int, epochs: int, batch_size: int,
@@ -295,9 +463,11 @@ class _Cohort:
         else:
             ns = [int(v) for v in self.n]
         steps = max(steps_per_epoch(n, batch_size) for n in ns) * epochs
-        idx = np.zeros((C, steps, batch_size), np.int32)
-        w = np.zeros((C, steps, batch_size), np.float32)
-        valid = np.zeros((C, steps), bool)
+        # dummy-client rows [C:c_pad] stay all-zero / valid=False: every one
+        # of their steps is a no-op under the _where_tree gating
+        idx = np.zeros((self.c_pad, steps, batch_size), np.int32)
+        w = np.zeros((self.c_pad, steps, batch_size), np.float32)
+        valid = np.zeros((self.c_pad, steps), bool)
         for i, c in enumerate(self.members):
             perms = [c.rng.permutation(ns[i]) for _ in range(epochs)]
             idx[i], w[i], valid[i] = padded_epoch_plan(perms, batch_size, steps)
@@ -314,73 +484,114 @@ class _Cohort:
 
     def local_train(self, epochs: int, batch_size: int) -> List[float]:
         idx, w, valid = self._plan(-1, epochs, batch_size)
-        self.params, self.opt_state, losses = self._train(
-            self.params, self.opt_state, self.x, self.y,
-            jnp.asarray(idx), jnp.asarray(w), jnp.asarray(valid))
-        return self._mean_losses(losses, valid)
+        with self._ctx():
+            self.params, self.opt_state, losses = self._train(
+                self.params, self.opt_state, self.x, self.y,
+                self._put_c(idx), self._put_c(w), self._put_c(valid))
+        C = len(self.members)
+        return self._mean_losses(np.asarray(losses)[:C], valid[:C])
 
     def distill(self, px, teacher, weight, epochs: int,
                 batch_size: int) -> List[float]:
         idx, w, valid = self._plan(len(px), epochs, batch_size, weight=weight)
-        self.params, self.opt_state, losses = self._distill(
-            self.params, self.opt_state, jnp.asarray(px), jnp.asarray(teacher),
-            jnp.asarray(idx), jnp.asarray(w), jnp.asarray(valid))
-        return self._mean_losses(losses, valid)
+        with self._ctx():
+            self.params, self.opt_state, losses = self._distill(
+                self.params, self.opt_state,
+                self._put_rep(px), self._put_rep(teacher),
+                self._put_c(idx), self._put_c(w), self._put_c(valid))
+        C = len(self.members)
+        return self._mean_losses(np.asarray(losses)[:C], valid[:C])
 
     def distill_private(self, teacher_by_class, valid_by_class, epochs: int,
                         batch_size: int) -> List[float]:
         idx, w, valid = self._plan(-1, epochs, batch_size)
-        self.params, self.opt_state, losses = self._distill_private(
-            self.params, self.opt_state, self.x, self.y,
-            jnp.asarray(teacher_by_class),
-            jnp.asarray(np.asarray(valid_by_class, np.float32)),
-            jnp.asarray(idx), jnp.asarray(w), jnp.asarray(valid))
-        return self._mean_losses(losses, valid)
+        with self._ctx():
+            self.params, self.opt_state, losses = self._distill_private(
+                self.params, self.opt_state, self.x, self.y,
+                self._put_rep(teacher_by_class),
+                self._put_rep(np.asarray(valid_by_class, np.float32)),
+                self._put_c(idx), self._put_c(w), self._put_c(valid))
+        C = len(self.members)
+        return self._mean_losses(np.asarray(losses)[:C], valid[:C])
 
     def classwise_means(self):
-        means, counts = self._classwise(self.params, self.x, self.y,
-                                        self.sample_mask)
+        with self._ctx():
+            means, counts = self._classwise(self.params, self.x, self.y,
+                                            self.sample_mask)
+        means, counts = np.asarray(means), np.asarray(counts)
         return [(means[i], counts[i]) for i in range(len(self.members))]
 
     def proxy_logits(self, px) -> np.ndarray:
-        return np.asarray(self._predict(self.params, jnp.asarray(px)))
+        with self._ctx():
+            out = self._predict(self.params, self._put_rep(px))
+        return np.asarray(out)[: len(self.members)]
 
     def filter_masks(self, px, powner) -> np.ndarray:
         t = len(px)
-        if self.filter_kind == "none":
+        if self.filter_kind == "none" \
+                and all(c.dre is None for c in self.members):
             return np.ones((len(self.members), t), bool)
-        if self.filter_kind == "loop":
+        if self.filter_kind in ("none", "loop"):
+            # "none" with any DRE present means no state was learned or
+            # packed (e.g. a transient engine over unlearned clients, or a
+            # mixed some-have-DREs cohort): defer to the per-client path so
+            # it behaves exactly like the loop engine — including failing
+            # loudly on unlearned estimators instead of silently returning
+            # all-True masks
             return np.stack([np.asarray(c.filter_mask(px, powner).mask)
                              for c in self.members])
-        pxf = jnp.asarray(np.asarray(px).reshape(t, -1))
-        owner = jnp.asarray(powner)
-        cids = jnp.asarray([c.cid for c in self.members])
+        pxf = self._put_rep(np.asarray(px).reshape(t, -1))
+        owner = self._put_rep(powner)
+        # dummy rows get cid -1 (never an owner), their masks are sliced off
+        cids = self._put_c(self._pad_rows(
+            jnp.asarray([c.cid for c in self.members]), fill=-1))
         st = self._filter_state
-        if self.filter_kind == "kmeans":
-            masks = self._kmeans_masks(st["centroids"], st["thresholds"],
-                                       cids, pxf, owner)
-        else:
-            masks = self._kulsif_masks(st["alpha"], st["aux"], st["private"],
-                                       st["n"], st["thresholds"], cids,
-                                       st["sigma"], st["lam"], pxf, owner)
-        return np.asarray(masks)
+        with self._ctx():
+            if self.filter_kind == "kmeans":
+                masks = self._kmeans_masks(st["centroids"], st["thresholds"],
+                                           cids, pxf, owner)
+            else:
+                masks = self._kulsif_masks(st["alpha"], st["aux"],
+                                           st["private"], st["n"],
+                                           st["thresholds"], cids,
+                                           st["sigma"], st["lam"], pxf, owner)
+        return np.asarray(masks)[: len(self.members)]
 
     def evaluate(self, x_test, y_test, batch_size: int = 512) -> List[float]:
-        n = len(y_test)
-        correct = np.zeros(len(self.members), np.int64)
-        for s in range(0, n, batch_size):
-            logits = self._predict(self.params,
-                                   jnp.asarray(x_test[s:s + batch_size]))
-            pred = np.asarray(jnp.argmax(logits, -1))          # (C, b)
-            correct += (pred == np.asarray(y_test[s:s + batch_size])[None]
-                        ).sum(axis=1)
-        return [int(c) / n for c in correct]
+        """Masked fixed-shape eval: the tail batch is padded to ``batch_size``
+        instead of sliced ragged (which recompiled ``_predict`` for every
+        distinct ``n % batch_size`` tail), and the whole pass — scan over
+        batches, vmap over clients — is one compiled, device-parallel call."""
+        x = np.asarray(x_test)
+        y = np.asarray(y_test)
+        n = len(y)
+        nb = max(1, -(-n // batch_size))
+        pad = nb * batch_size - n
+        if pad:
+            x = np.concatenate([x, np.zeros((pad, *x.shape[1:]), x.dtype)])
+            y = np.concatenate([y, np.zeros((pad,), y.dtype)])
+        m = np.zeros((nb * batch_size,), np.int32)
+        m[:n] = 1
+        with self._ctx():
+            correct = self._eval(
+                self.params,
+                self._put_rep(x.reshape(nb, batch_size, *x.shape[1:])),
+                self._put_rep(y.reshape(nb, batch_size)),
+                self._put_rep(m.reshape(nb, batch_size)))
+        return [int(c) / n for c in np.asarray(correct)[: len(self.members)]]
 
     def sync_to_clients(self) -> None:
         """Write stacked params/opt-state back onto the Client objects."""
+        params, opt_state = self.params, self.opt_state
+        if self.mesh is not None:
+            # gather through host first: rows of a mesh-sharded stack live on
+            # different devices, but clients expect default-device arrays
+            params = jax.tree.map(lambda l: jnp.asarray(np.asarray(l)), params)
+            opt_state = jax.tree.map(lambda l: jnp.asarray(np.asarray(l)),
+                                     opt_state)
         for i, c in enumerate(self.members):
-            c.params = _unstack_tree(self.params, i)
-            c.opt_state = _unstack_tree(self.opt_state, i)
+            c.params = _unstack_tree(params, i)
+            c.opt_state = _unstack_tree(opt_state, i)
 
 
 class CohortEngine:
@@ -390,17 +601,26 @@ class CohortEngine:
     rng streams, but their params/opt-state live *stacked on device* for the
     engine's lifetime; call ``sync_to_clients()`` before reading them back
     (e.g. for checkpointing).
+
+    ``mesh`` (``repro.fed.mesh.build_client_mesh``) shards every cohort's
+    client axis across a 1-D device mesh; ``None`` keeps the single-device
+    semantics. Each cohort pads its own client axis to a mesh-size multiple
+    with validity-gated dummy clients, so any population shape works.
     """
 
-    def __init__(self, clients: Sequence[Client]):
+    def __init__(self, clients: Sequence[Client], mesh=None,
+                 mesh_axis: str = DEFAULT_CLIENT_AXIS):
         self.clients = list(clients)
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
         groups: Dict[object, Tuple[List[Client], List[int]]] = {}
         for pos, c in enumerate(self.clients):
             key = c.arch_key if c.arch_key is not None else ("solo", pos)
             members, positions = groups.setdefault(key, ([], []))
             members.append(c)
             positions.append(pos)
-        self.cohorts = [_Cohort(m, p) for m, p in groups.values()]
+        self.cohorts = [_Cohort(m, p, mesh=mesh, mesh_axis=mesh_axis)
+                        for m, p in groups.values()]
 
     @property
     def num_clients(self) -> int:

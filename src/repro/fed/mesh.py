@@ -1,0 +1,92 @@
+"""1-D client mesh for the cohort engine: devices along the client axis.
+
+The cohort engine stacks clients into leading-axis ``(C, ...)`` pytrees
+(``repro.fed.cohort``) — a shape that is already mesh-ready: every round
+phase is independent per client, so sharding the leading axis over a 1-D
+device mesh partitions the whole round with zero cross-device collectives
+(the only cross-client ops — server aggregation — happen on host).
+
+``build_client_mesh`` builds that mesh over ``jax.devices()``. On CPU-only
+hosts XLA exposes one device by default; set
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=N
+
+*before* the first jax import to emulate an N-device host (this is how CI
+exercises the sharded path — see ``tests/test_cohort_parity.py`` and the
+multi-device job in ``.github/workflows/ci.yml``).
+
+Cohorts whose client count is not a multiple of the mesh size are padded
+with *dummy clients* (``padded_size``): their per-step validity flags are
+all False, so the engine's existing ``_where_tree`` gating turns every
+training step into a no-op and their outputs are sliced off before any
+result leaves the engine.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_CLIENT_AXIS = "clients"
+
+
+def build_client_mesh(num_devices: int = 0,
+                      axis: str = DEFAULT_CLIENT_AXIS) -> Optional[Mesh]:
+    """Build the 1-D client mesh, or ``None`` for the unsharded path.
+
+    ``num_devices``: 0 = no mesh (single-device semantics, the default);
+    ``-1`` = all visible devices; ``N > 0`` = exactly N devices (a clear
+    error if fewer are visible).
+    """
+    if num_devices == 0:
+        return None
+    devices = jax.devices()
+    if num_devices < 0:
+        num_devices = len(devices)
+    if num_devices > len(devices):
+        raise ValueError(
+            f"requested a {num_devices}-device client mesh but only "
+            f"{len(devices)} jax device(s) are visible; on CPU hosts set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{num_devices} before the first jax import")
+    return Mesh(devices[:num_devices], (axis,))
+
+
+def padded_size(count: int, mesh: Optional[Mesh]) -> int:
+    """Client-axis length after padding to a multiple of the mesh size."""
+    if mesh is None:
+        return count
+    d = mesh.devices.size
+    return ((count + d - 1) // d) * d
+
+
+def client_sharding(mesh: Mesh, axis: str = DEFAULT_CLIENT_AXIS) -> NamedSharding:
+    """Sharding that splits the leading (client) axis across the mesh."""
+    return NamedSharding(mesh, P(axis))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding that replicates a value on every mesh device."""
+    return NamedSharding(mesh, P())
+
+
+def shard_clients(tree, mesh: Optional[Mesh],
+                  axis: str = DEFAULT_CLIENT_AXIS):
+    """Place every leaf of ``tree`` with its leading axis split over the mesh.
+
+    No-op without a mesh, so engine code calls it unconditionally. Leaves
+    must already be padded to a client-axis multiple of the mesh size.
+    """
+    if mesh is None:
+        return tree
+    s = client_sharding(mesh, axis)
+    return jax.tree.map(lambda leaf: jax.device_put(leaf, s), tree)
+
+
+def replicate(tree, mesh: Optional[Mesh]):
+    """Place every leaf of ``tree`` replicated on the mesh (no-op without)."""
+    if mesh is None:
+        return tree
+    s = replicated_sharding(mesh)
+    return jax.tree.map(lambda leaf: jax.device_put(leaf, s), tree)

@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.common.types import FedConfig
 from repro.core.methods import get_method
-from repro.core.protocol import ExperimentResult, as_engine, run_experiment
+from repro.core.protocol import (ExperimentResult, engine_from_config,
+                                 run_experiment)
 from repro.data.partition import partition
 from repro.data.proxy import build_proxy
 from repro.data.synthetic import make_dataset
@@ -90,8 +91,9 @@ def hw_guess(x) -> int:
 
 
 def build_engine(clients: List[Client], cfg: FedConfig):
-    """Select the execution engine for a client population (cfg.engine)."""
-    return as_engine(clients, cfg.engine)
+    """Select the execution engine for a client population (cfg.engine),
+    including the cohort engine's client mesh (cfg.num_devices)."""
+    return engine_from_config(clients, cfg)
 
 
 def run(cfg: FedConfig, dataset_name: str = "mnist_feat", *,

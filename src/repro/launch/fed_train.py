@@ -22,6 +22,12 @@ def main(argv=None):
     ap.add_argument("--engine", default="loop", choices=["loop", "cohort"],
                     help="loop = per-client python loop; cohort = vmapped "
                          "homogeneous cohorts (fed/cohort.py)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard the cohort client axis over a 1-D device "
+                         "mesh: 0 = unsharded, -1 = all jax devices, N = "
+                         "exactly N (CPU hosts: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N). "
+                         "Requires --engine cohort")
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--proxy-fraction", type=float, default=0.2)
@@ -46,6 +52,7 @@ def main(argv=None):
         lr=args.lr,
         seed=args.seed,
         engine=args.engine,
+        num_devices=args.devices,
     )
 
     def progress(log):

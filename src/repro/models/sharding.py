@@ -8,6 +8,7 @@ single CPU device in tests and fully sharded in the dry-run.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 from typing import Optional, Sequence, Union
 
@@ -50,6 +51,21 @@ PROFILES = {
 def set_logical_rules(rules: Optional[dict], mesh=None) -> None:
     _state.rules = rules
     _state.mesh = mesh
+
+
+@contextlib.contextmanager
+def logical_rules(rules: Optional[dict], mesh=None):
+    """Scoped ``set_logical_rules``: installs (rules, mesh) for the duration
+    of the block and restores the previous mapping on exit. Engines that own
+    a private mesh (e.g. the cohort engine's 1-D client mesh) wrap their
+    jitted-call sites in this so traces triggered inside pick up the right
+    rules without leaking them into unrelated code."""
+    prev = (getattr(_state, "rules", None), getattr(_state, "mesh", None))
+    set_logical_rules(rules, mesh)
+    try:
+        yield
+    finally:
+        set_logical_rules(*prev)
 
 
 def get_mesh():

@@ -1,0 +1,75 @@
+"""Multi-device cohort parity checker (shared by test + subprocess modes).
+
+``check_parity`` runs the same experiment through the loop engine, the
+unsharded cohort engine, and the mesh-sharded cohort engine, and asserts the
+round logs match within the acceptance tolerance (1e-5).
+
+jax fixes the device count at first init, so a single-device pytest process
+cannot build a 4-device mesh; ``tests/test_cohort_parity.py`` re-runs this
+file as a subprocess with ``--xla_force_host_platform_device_count`` set
+when too few devices are visible (and calls ``check_parity`` directly when
+CI already forced a multi-device host — see .github/workflows/ci.yml).
+
+    PYTHONPATH=src python tests/_mesh_parity_prog.py --devices 4 --clients 4 5
+"""
+from __future__ import annotations
+
+TOL = dict(rtol=0.0, atol=1e-5)
+
+
+def check_parity(num_clients: int, devices: int, method: str = "edgefd",
+                 scenario: str = "strong") -> None:
+    import numpy as np
+
+    from repro.common.types import FedConfig
+    from repro.fed import simulator
+
+    results = {}
+    for name, engine, ndev in (("loop", "loop", 0),
+                               ("cohort", "cohort", 0),
+                               ("mesh", "cohort", devices)):
+        cfg = FedConfig(num_clients=num_clients, rounds=2, method=method,
+                        scenario=scenario, proxy_batch=120, batch_size=32,
+                        lr=1e-2, seed=0, engine=engine, num_devices=ndev)
+        results[name] = simulator.run(cfg, "mnist_feat",
+                                      n_train=800, n_test=300)
+    base = results["loop"]
+    for name in ("cohort", "mesh"):
+        other = results[name]
+        assert len(base.rounds) == len(other.rounds)
+        for rl, rc in zip(base.rounds, other.rounds):
+            np.testing.assert_allclose(rl.accs, rc.accs, **TOL)
+            np.testing.assert_allclose(rl.mean_acc, rc.mean_acc, **TOL)
+            np.testing.assert_allclose(rl.local_loss, rc.local_loss, **TOL)
+            np.testing.assert_allclose(rl.distill_loss, rc.distill_loss,
+                                       **TOL)
+            np.testing.assert_allclose(rl.id_fraction, rc.id_fraction, **TOL)
+            assert rl.bytes_up == rc.bytes_up
+            assert rl.bytes_down == rc.bytes_down
+
+
+def main(argv=None) -> None:
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--clients", type=int, nargs="+", default=[4, 5])
+    args = ap.parse_args(argv)
+
+    # must happen before the first jax import (device count is init-time)
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    assert jax.device_count() >= args.devices, (
+        f"forced {args.devices} host devices but jax sees "
+        f"{jax.device_count()} — XLA_FLAGS arrived after jax init?")
+    for c in args.clients:
+        check_parity(c, args.devices)
+        print(f"PARITY-OK clients={c} devices={args.devices}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,9 @@ import os
 import pathlib
 import sys
 
-# tests run on the single real CPU device; only dryrun.py overrides this
+# tests run on CPU; the CI matrix additionally forces a multi-device host
+# (XLA_FLAGS=--xla_force_host_platform_device_count=4) so the mesh-sharded
+# cohort engine is exercised in-process — see test_cohort_parity.py
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 # Property tests prefer real hypothesis (requirements-dev.txt); fall back to

@@ -16,6 +16,21 @@ def _toy(n=400, k=10, seed=0):
     return x, y
 
 
+def test_weak_partition_rejects_bad_labels_per_client():
+    """labels_per_client outside [1, num_classes] used to surface as an
+    opaque numpy error from rng.choice(replace=False); it must be a clear
+    ValueError naming the parameter."""
+    x, y = _toy()
+    for bad in (11, 0, -2):
+        with pytest.raises(ValueError, match="labels_per_client"):
+            partition(x, y, num_clients=3, num_classes=10, scenario="weak",
+                      labels_per_client=bad)
+    # the boundary value is legal: every client holds every label
+    parts = partition(x, y, num_clients=3, num_classes=10, scenario="weak",
+                      labels_per_client=10)
+    assert all(len(p.labels) == 10 for p in parts)
+
+
 def test_strong_noniid_disjoint_labels():
     x, y = _toy()
     parts = partition(x, y, num_clients=5, num_classes=10, scenario="strong")

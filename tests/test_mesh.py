@@ -1,0 +1,93 @@
+"""fed/mesh.py invariants: mesh construction, padding, placement, wiring.
+
+Multi-device behavior (real sharding, client-axis padding) is covered
+end-to-end by ``test_cohort_parity.py::test_mesh_sharded_parity_forced_devices``;
+these tests pin the helper contracts and the single-device-mesh path, which
+must be available on any host.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.fed import mesh as M
+
+
+def test_build_client_mesh_zero_is_off():
+    assert M.build_client_mesh(0) is None
+
+
+def test_build_client_mesh_single_device():
+    m = M.build_client_mesh(1, axis="clients")
+    assert m.axis_names == ("clients",)
+    assert m.devices.size == 1
+
+
+def test_build_client_mesh_all_devices():
+    m = M.build_client_mesh(-1)
+    assert m.devices.size == jax.device_count()
+
+
+def test_build_client_mesh_too_many_devices_is_legible():
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        M.build_client_mesh(jax.device_count() + 1)
+
+
+def test_padded_size():
+    class FakeMesh:                     # only .devices.size is read
+        devices = np.zeros(4)
+
+    assert M.padded_size(8, None) == 8  # no mesh: no padding
+    assert M.padded_size(5, FakeMesh) == 8
+    assert M.padded_size(8, FakeMesh) == 8
+    assert M.padded_size(1, FakeMesh) == 4
+
+
+def test_shard_and_replicate_placement():
+    m = M.build_client_mesh(1)
+    tree = {"a": np.arange(8.0).reshape(4, 2), "b": np.arange(4)}
+    sharded = M.shard_clients(tree, m)
+    np.testing.assert_array_equal(np.asarray(sharded["a"]), tree["a"])
+    assert sharded["a"].sharding.mesh.axis_names == ("clients",)
+    rep = M.replicate(tree, m)
+    np.testing.assert_array_equal(np.asarray(rep["b"]), tree["b"])
+    assert rep["b"].sharding.is_fully_replicated
+    # no mesh: both placements are the identity
+    assert M.shard_clients(tree, None) is tree
+    assert M.replicate(tree, None) is tree
+
+
+def test_loop_engine_rejects_num_devices():
+    from repro.core.protocol import as_engine
+    with pytest.raises(ValueError, match="cohort"):
+        as_engine([], "loop", num_devices=2)
+
+
+def test_prebuilt_meshless_engine_with_num_devices_warns():
+    from repro.core.protocol import LoopEngine, as_engine
+    engine = LoopEngine([])
+    with pytest.warns(UserWarning, match="pre-built"):
+        assert as_engine(engine, "cohort", num_devices=2) is engine
+
+
+def test_single_device_mesh_parity():
+    """num_devices=1 runs the full sharded code path (device_put placement,
+    output pinning, padded learn) on any host and must reproduce the
+    unsharded cohort logs exactly."""
+    from repro.common.types import FedConfig
+    from repro.fed import simulator
+
+    logs = {}
+    for nd in (0, 1):
+        cfg = FedConfig(num_clients=3, rounds=1, method="edgefd",
+                        scenario="strong", proxy_batch=60, batch_size=32,
+                        lr=1e-2, seed=0, engine="cohort", num_devices=nd)
+        logs[nd] = simulator.run(cfg, "mnist_feat", n_train=400, n_test=200)
+    for a, b in zip(logs[0].rounds, logs[1].rounds):
+        np.testing.assert_allclose(a.accs, b.accs, rtol=0.0, atol=1e-5)
+        np.testing.assert_allclose(a.local_loss, b.local_loss,
+                                   rtol=0.0, atol=1e-5)
+        np.testing.assert_allclose(a.distill_loss, b.distill_loss,
+                                   rtol=0.0, atol=1e-5)
+        np.testing.assert_allclose(a.id_fraction, b.id_fraction,
+                                   rtol=0.0, atol=1e-5)
