@@ -21,10 +21,26 @@ sweep to ``BENCH_cohort_mesh.json`` at the repo root:
 
 Wall-clock decreases while the device count stays within the host's
 physical cores; oversubscribed counts plateau.
+
+Participation sweep (ISSUE 3): ``--fractions 0.25 0.5 1.0`` re-runs both
+engines at fixed C with ``participation_fraction`` swept, recording the
+result to ``BENCH_participation.json`` at the repo root. The loop engine's
+per-round wall-clock drops roughly linearly with the fraction (it skips
+sampled-out clients outright); the cohort engine's compiled phases stay
+cached across fractions and rounds (sampled-out clients are ``_where_tree``
+no-op lanes — same shapes, zero retraces — so its already-small round time
+stays flat while per-round upload bytes shrink with the fraction):
+
+    PYTHONPATH=src python benchmarks/cohort_scaling.py --fractions 0.25 0.5 1.0
+
+``--parse FILE`` validates a previously written result file (rows present,
+both engines, sane times/accuracies) and exits non-zero on regression —
+CI's bench-smoke job runs the tiny benchmark and then this gate.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import subprocess
@@ -47,12 +63,14 @@ MLP_HIDDEN = (64,)
 
 
 def bench_engine(engine: str, num_clients: int, rounds: int,
-                 seed: int = 0, num_devices: int = 0) -> dict:
+                 seed: int = 0, num_devices: int = 0,
+                 fraction: float = 1.0) -> dict:
     rounds = max(rounds, 1)  # at least one timed round after the warmup
     cfg = FedConfig(num_clients=num_clients, rounds=rounds, method="edgefd",
                     scenario="iid", proxy_batch=256, batch_size=32,
                     lr=1e-2, seed=seed, engine=engine,
-                    num_devices=num_devices)
+                    num_devices=num_devices,
+                    participation_fraction=fraction)
     clients, server, x_test, y_test = simulator.build_experiment(
         cfg, "mnist_feat", n_train=SAMPLES_PER_CLIENT * num_clients,
         n_test=512, mlp_hidden=MLP_HIDDEN)
@@ -62,16 +80,22 @@ def bench_engine(engine: str, num_clients: int, rounds: int,
     t0 = time.perf_counter()
     import jax
     eng.learn_dres(jax.random.PRNGKey(cfg.seed))
-    run_round(0, eng, server, method, cfg, x_test, y_test)   # warmup+compile
+    # warm up at full participation so *every* client's steps compile now:
+    # otherwise a swept fraction < 1 pays first-touch compiles for late
+    # sampled clients inside the timed rounds (loop engine jits per client)
+    warm_cfg = dataclasses.replace(cfg, participation_fraction=1.0)
+    run_round(0, eng, server, method, warm_cfg, x_test, y_test)
     warm_s = time.perf_counter() - t0
 
     times = []
+    up0 = server.bytes_received
     for r in range(1, rounds + 1):
         log = run_round(r, eng, server, method, cfg, x_test, y_test)
         times.append(log.wall_s)
     return {"engine": engine, "clients": num_clients,
-            "devices": num_devices,
+            "devices": num_devices, "fraction": fraction,
             "warmup_s": warm_s, "round_s": float(np.median(times)),
+            "bytes_up_per_round": (server.bytes_received - up0) // rounds,
             "final_acc": log.mean_acc}
 
 
@@ -122,6 +146,45 @@ def device_sweep(devices, clients, rounds: int) -> list:
     return rows
 
 
+def participation_sweep(fractions, clients, rounds: int) -> list:
+    """Both engines at fixed C, participation_fraction swept in-process
+    (the fraction changes data, never shapes — the cohort engine's jitted
+    phases compile once at the first fraction and stay cached)."""
+    rows = []
+    print(f"{'C':>5} {'engine':>7} {'fraction':>9} {'warmup_s':>9} "
+          f"{'round_s':>9} {'MB_up/rd':>9}")
+    for c in clients:
+        for engine in ("loop", "cohort"):
+            for f in fractions:
+                row = bench_engine(engine, c, rounds, fraction=f)
+                rows.append(row)
+                print(f"{c:>5} {engine:>7} {f:>9.2f} {row['warmup_s']:9.2f} "
+                      f"{row['round_s']:9.3f} "
+                      f"{row['bytes_up_per_round'] / 1e6:9.2f}")
+    return rows
+
+
+def parse_check(path: str) -> None:
+    """Regression gate over a result file written by any mode of this
+    benchmark: crash-shaped output (no rows, missing engines, nonsense
+    times or accuracies) exits non-zero with a reason."""
+    with open(path) as f:
+        data = json.load(f)
+    rows = data["rows"] if isinstance(data, dict) else data
+    if not rows:
+        raise SystemExit(f"{path}: no benchmark rows")
+    engines = {r.get("engine") for r in rows}
+    if "cohort" not in engines:
+        raise SystemExit(f"{path}: cohort engine missing (got {engines})")
+    for r in rows:
+        if not (r.get("round_s", 0) > 0 and r.get("warmup_s", 0) > 0):
+            raise SystemExit(f"{path}: non-positive timing in row {r}")
+        acc = r.get("final_acc", 0.0)
+        if not 0.0 <= acc <= 1.0:
+            raise SystemExit(f"{path}: final_acc {acc} out of [0, 1] in {r}")
+    print(f"{path}: {len(rows)} rows OK (engines: {sorted(engines)})")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, nargs="+", default=None)
@@ -134,12 +197,23 @@ def main(argv=None):
                     help="mesh-device sweep mode: cohort engine at fixed C "
                          "(default 128), one emulated-host-device count per "
                          "subprocess; writes BENCH_cohort_mesh.json")
+    ap.add_argument("--fractions", type=float, nargs="+", default=None,
+                    help="participation sweep mode: both engines at fixed C "
+                         "(default 128), participation_fraction swept; "
+                         "writes BENCH_participation.json")
     ap.add_argument("--out", default=None,
-                    help="device-sweep output path (default: "
-                         "<repo>/BENCH_cohort_mesh.json)")
+                    help="output path override (default: results dir, or "
+                         "<repo>/BENCH_*.json for the sweep modes)")
+    ap.add_argument("--parse", default=None, metavar="FILE",
+                    help="validate a previously written result file and "
+                         "exit (CI regression gate)")
     ap.add_argument("--_forced-devices", type=int, default=0,
                     dest="forced_devices", help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
+
+    if args.parse:
+        parse_check(args.parse)
+        return []
 
     if args.forced_devices:
         # device-sweep child: this process was launched with the forced
@@ -168,6 +242,26 @@ def main(argv=None):
         print(f"saved {out}")
         return rows
 
+    if args.fractions is not None:
+        clients = args.clients or [128]
+        rows = participation_sweep(args.fractions, clients,
+                                   max(args.rounds, 3))
+        out = args.out or os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_participation.json")
+        with open(out, "w") as f:
+            json.dump({"benchmark": "participation_fraction_sweep",
+                       "clients": clients,
+                       "host_cpu_count": os.cpu_count(),
+                       "note": "loop round time scales with the sampled "
+                               "fraction (skipped clients cost nothing); "
+                               "cohort phases stay compiled across "
+                               "fractions (no-op lanes), so its round "
+                               "time is flat while upload bytes shrink",
+                       "rows": rows}, f, indent=2)
+        print(f"saved {out}")
+        return rows
+
     args.clients = args.clients or [8, 32, 128, 512]
     rows = []
     print(f"{'C':>5} {'engine':>7} {'warmup_s':>9} {'round_s':>9} {'speedup':>8}")
@@ -187,7 +281,13 @@ def main(argv=None):
                          if loop_s else "")
             print(f"{c:>5} {engine:>7} {row['warmup_s']:9.2f} "
                   f"{row['round_s']:9.3f} {speed:>8}")
-    path = save_json("cohort_scaling.json", rows)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"benchmark": "cohort_scaling", "rows": rows}, f,
+                      indent=2)
+        path = args.out
+    else:
+        path = save_json("cohort_scaling.json", rows)
     print(f"saved {path}")
     return rows
 

@@ -23,6 +23,18 @@ cfg = FedConfig(
     # CPU-only hosts emulate an N-device host by setting
     # XLA_FLAGS=--xla_force_host_platform_device_count=N before jax loads.
     num_devices=0,
+    # Edge clients drop in and out: participation_fraction=0.5 samples
+    # half the clients each round (participation_policy: "uniform",
+    # "weighted" by data size, or "roundrobin"), and staleness_decay
+    # lets the server reuse a non-participant's last-reported logits at
+    # weight decay**age (0 = drop them, 1 = full FedBuff-style reuse).
+    # The CLI spells it
+    #   python -m repro.launch.fed_train --participation 0.5 \
+    #       --policy roundrobin --staleness-decay 0.5
+    # The defaults below reproduce the paper's everyone-every-round runs.
+    participation_fraction=1.0,
+    participation_policy="uniform",
+    staleness_decay=0.0,
 )
 
 result = simulator.run(cfg, dataset_name="mnist_feat",

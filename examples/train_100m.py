@@ -12,8 +12,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.common.types import ArchConfig, AttentionKind
 from repro.checkpoint import save_checkpoint
+from repro.common.types import ArchConfig, AttentionKind
 from repro.launch.train import make_batch_fn
 from repro.models import transformer as T
 from repro.optim.optimizers import adamw

@@ -1,11 +1,11 @@
 from repro.common.pytree import (
+    init_conv,
     init_dense,
     init_embedding,
-    init_conv,
-    param_count,
     param_bytes,
-    tree_zeros_like,
+    param_count,
     tree_add,
     tree_scale,
+    tree_zeros_like,
 )
-from repro.common.types import ArchConfig, InputShape, MoEConfig, AttentionKind
+from repro.common.types import ArchConfig, AttentionKind, InputShape, MoEConfig

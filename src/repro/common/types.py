@@ -152,3 +152,16 @@ class FedConfig:
     # devices with XLA_FLAGS=--xla_force_host_platform_device_count=N.
     num_devices: int = 0
     mesh_axis: str = "clients"
+    # partial participation (repro.fed.participation): each round a subset of
+    # round(participation_fraction * num_clients) clients trains/reports;
+    # 1.0 = every client (the paper's setting, bit-for-bit the legacy logs).
+    participation_fraction: float = 1.0
+    # how the per-round subset is drawn, seeded from (seed, round):
+    # "uniform" = without replacement, "weighted" = P ∝ private-set size,
+    # "roundrobin" = deterministic rotating block.
+    participation_policy: str = "uniform"
+    # staleness model: non-participants keep their last-reported proxy logits
+    # and the server down-weights them by staleness_decay ** age (age =
+    # rounds since the client last reported). 0.0 drops non-participants
+    # silently; 1.0 reuses stale knowledge at full weight (FedBuff-style).
+    staleness_decay: float = 0.0

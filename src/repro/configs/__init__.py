@@ -5,18 +5,19 @@ import dataclasses
 
 from repro.common.types import ArchConfig, MoEConfig
 from repro.configs import (
-    qwen2_5_3b,
-    phi3_5_moe,
+    granite_8b,
+    granite_moe_1b,
+    hubert_xlarge,
     internlm2_20b,
     llama32_vision_90b,
     llama3_405b,
-    hubert_xlarge,
-    xlstm_350m,
+    phi3_5_moe,
+    qwen2_5_3b,
     recurrentgemma_2b,
-    granite_moe_1b,
-    granite_8b,
+    xlstm_350m,
 )
-from repro.configs.shapes import SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K
+from repro.configs.shapes import (DECODE_32K, LONG_500K, PREFILL_32K, SHAPES,
+                                  TRAIN_4K)
 
 ARCHS: dict[str, ArchConfig] = {
     c.name: c

@@ -4,16 +4,18 @@ KMeans-DRE density-ratio estimation, two-stage client-side filtering,
 masked-mean server aggregation, and the Algorithm-1 protocol, plus the six
 baseline FD methods of Table III.
 """
-from repro.core.kmeans import kmeans_fit, min_dist_to_centroids, pairwise_sq_dists
-from repro.core.dre import KMeansDRE, KuLSIFDRE, make_dre
-from repro.core.filtering import two_stage_filter, server_entropy_filter, FilterStats
-from repro.core.distill import kd_kl_loss, kd_mse_loss, ce_loss
+from repro.core import fd_trainer
 from repro.core.aggregation import (
+    classwise_mean_logits,
     masked_mean_logits,
     masked_mean_logits_psum,
-    classwise_mean_logits,
+    weighted_masked_mean_logits,
 )
+from repro.core.distill import ce_loss, kd_kl_loss, kd_mse_loss
+from repro.core.dre import KMeansDRE, KuLSIFDRE, make_dre
+from repro.core.filtering import (FilterStats, server_entropy_filter,
+                                  two_stage_filter)
+from repro.core.kmeans import kmeans_fit, min_dist_to_centroids, pairwise_sq_dists
 from repro.core.methods import METHODS, Method, get_method
-from repro.core.protocol import run_experiment, run_round, ExperimentResult
-from repro.core import fd_trainer
-from repro.core.privacy import make_dp, privatize_proxy, gaussian_sigma
+from repro.core.privacy import gaussian_sigma, make_dp, privatize_proxy
+from repro.core.protocol import ExperimentResult, run_experiment, run_round

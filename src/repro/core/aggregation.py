@@ -30,6 +30,33 @@ def masked_mean_logits(logits, mask, *, temperature_sharpen: Optional[float] = N
     return teacher, valid
 
 
+def weighted_masked_mean_logits(logits, mask, client_weights, *,
+                                temperature_sharpen: Optional[float] = None):
+    """``masked_mean_logits`` with a per-client reliability weight.
+
+    ``client_weights``: (C,) — the staleness model's ``decay ** age`` (see
+    ``repro.fed.participation``). A fresh report carries weight 1, a stale
+    one decays geometrically, weight 0 removes the client entirely; with
+    all-ones weights this reduces to ``masked_mean_logits`` exactly (the
+    server takes that code path instead for bit-for-bit stability).
+    """
+    w = mask.astype(jnp.float32) * client_weights[:, None]   # (C, t)
+    wl = w[..., None]                                        # (C, t, 1)
+    s = jnp.sum(logits.astype(jnp.float32) * wl, axis=0)     # (t, K)
+    den = jnp.sum(wl, axis=0)                                # (t, 1)
+    # divide by den itself (not a floor): the weights must cancel, so a
+    # position whose only contributor is heavily decayed still recovers
+    # that contributor's logits exactly. s is exactly 0 wherever den is 0
+    # (all weights zero), so the dummy divisor there yields a zero teacher
+    # — matching the unweighted form.
+    teacher = s / jnp.where(den > 0.0, den, 1.0)
+    valid = den[..., 0] > 0.0
+    if temperature_sharpen:
+        probs = jax.nn.softmax(teacher / temperature_sharpen, axis=-1)
+        teacher = jnp.log(jnp.maximum(probs, 1e-12))         # sharpened logits
+    return teacher, valid
+
+
 def masked_mean_logits_psum(local_logits, local_mask, axis_name: str = "data"):
     """Collective form for the sharded FD runtime: each mesh rank holds one
     client's logits; the masked mean is one all-reduce (psum of (Σ m·y, Σ m))

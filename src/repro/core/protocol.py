@@ -22,15 +22,13 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from typing import Callable, List, Optional, Sequence
+from typing import TYPE_CHECKING, Callable, List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.common.types import FedConfig
 from repro.core.methods import Method, get_method
-
-from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # avoid core <-> fed import cycle at runtime
     from repro.fed.client import Client
@@ -48,6 +46,11 @@ class RoundLog:
     bytes_up: int
     bytes_down: int
     wall_s: float
+    # partial participation (repro.fed.participation): the client ids that
+    # trained/reported this round (None = every client, the legacy setting)
+    # and the mean age of the aggregated reports in rounds (0.0 = all fresh)
+    participants: Optional[List[int]] = None
+    mean_staleness: float = 0.0
 
 
 @dataclasses.dataclass
@@ -86,33 +89,72 @@ class LoopEngine:
     def num_clients(self) -> int:
         return len(self.clients)
 
+    def _part(self, participants) -> np.ndarray:
+        """Normalize a participation mask (None = every client).
+
+        A sampled-out client is skipped entirely: no local training, no
+        proxy logits, no filter mask, and — critically for loop↔cohort
+        parity — no consumption of its private rng stream.
+        """
+        if participants is None:
+            return np.ones((len(self.clients),), bool)
+        part = np.asarray(participants, bool)
+        if part.shape != (len(self.clients),):
+            raise ValueError(
+                f"participation mask shape {part.shape} != "
+                f"({len(self.clients)},)")
+        return part
+
     def learn_dres(self, key) -> None:
         for i, c in enumerate(self.clients):
             c.learn_dre(jax.random.fold_in(key, i))
 
-    def local_train_all(self, epochs: int, batch_size: int) -> List[float]:
-        return [c.local_train(epochs, batch_size) for c in self.clients]
+    def local_train_all(self, epochs: int, batch_size: int,
+                        participants=None) -> List[float]:
+        part = self._part(participants)
+        return [c.local_train(epochs, batch_size) if part[i] else 0.0
+                for i, c in enumerate(self.clients)]
 
-    def classwise_means_all(self):
-        return [c.classwise_means() for c in self.clients]
+    def classwise_means_all(self, participants=None):
+        part = self._part(participants)
+        k = self.clients[0].num_classes
+        # zero counts: a sampled-out client contributes nothing classwise
+        skipped = (np.zeros((k, k), np.float32), np.zeros((k,), np.float32))
+        return [c.classwise_means() if part[i] else skipped
+                for i, c in enumerate(self.clients)]
 
-    def proxy_logits_and_masks(self, px, powner):
-        """Returns (logits (C, t, K), masks (C, t)) as numpy arrays."""
-        logits, masks = [], []
-        for c in self.clients:                             # lines 20–25
-            logits.append(np.asarray(c.proxy_logits(px)))
-            masks.append(np.asarray(c.filter_mask(px, powner).mask))
-        return np.stack(logits), np.stack(masks)
+    def proxy_logits_and_masks(self, px, powner, participants=None):
+        """Returns (logits (C, t, K), masks (C, t)) as numpy arrays;
+        sampled-out clients get zero logits and all-False masks (the
+        staleness buffer replaces those rows with their last report)."""
+        part = self._part(participants)
+        t = len(px)
+        k = self.clients[0].num_classes
+        logits = np.zeros((len(self.clients), t, k), np.float32)
+        masks = np.zeros((len(self.clients), t), bool)
+        for i, c in enumerate(self.clients):               # lines 20–25
+            if not part[i]:
+                continue
+            logits[i] = np.asarray(c.proxy_logits(px))
+            masks[i] = np.asarray(c.filter_mask(px, powner).mask)
+        return logits, masks
 
     def distill_all(self, px, teacher, weight, epochs: int,
-                    batch_size: int) -> List[float]:
+                    batch_size: int, participants=None) -> List[float]:
+        part = self._part(participants)
         return [c.distill(px, teacher, weight, epochs, batch_size)
-                for c in self.clients]
+                if part[i] else 0.0
+                for i, c in enumerate(self.clients)]
 
     def distill_private_all(self, teacher_by_class, valid_by_class,
-                            epochs: int, batch_size: int) -> List[float]:
+                            epochs: int, batch_size: int,
+                            participants=None) -> List[float]:
+        part = self._part(participants)
         out = []
-        for c in self.clients:
+        for i, c in enumerate(self.clients):
+            if not part[i]:
+                out.append(0.0)
+                continue
             teacher = teacher_by_class[c.y]                # (n, K)
             w = valid_by_class[c.y].astype(np.float32)
             out.append(c.distill(c.x, teacher, w, epochs, batch_size))
@@ -179,31 +221,67 @@ def run_round(r: int, clients, server: "Server", method: Method,
     engine = engine_from_config(clients, cfg)
     transient = engine is not clients
     t0 = time.perf_counter()
-    local_losses = engine.local_train_all(cfg.local_epochs, cfg.batch_size)
+    part = None
+    mean_staleness = 0.0
+    if cfg.participation_fraction > 1.0:
+        # catch this on every entry path, not only simulator.run — a direct
+        # run_round/run_experiment caller (e.g. the benchmark) must not
+        # silently fall back to full participation
+        raise ValueError("participation_fraction must be in (0, 1], got "
+                         f"{cfg.participation_fraction!r}")
+    if cfg.participation_fraction < 1.0:
+        # lazy import, like as_engine: core must not import fed at load time
+        from repro.fed.participation import sample_participants
+        sizes = None
+        if cfg.participation_policy == "weighted":
+            sizes = np.asarray([len(c.y) for c in engine.clients], np.int64)
+        part = sample_participants(
+            r, engine.num_clients, cfg.participation_fraction,
+            cfg.participation_policy, seed=cfg.seed, data_sizes=sizes)
+    # participants is passed as a kwarg only when a subset was actually
+    # sampled, so pre-existing engines with the historical interface keep
+    # working at participation_fraction=1 (and the legacy call sequence is
+    # preserved bit-for-bit)
+    kw = {} if part is None else {"participants": part}
+    local_losses = engine.local_train_all(cfg.local_epochs, cfg.batch_size,
+                                          **kw)
     distill_losses: List[float] = []
     id_frac = 1.0
 
     if method.name == "indlearn":
         pass  # no collaboration
     elif method.data_free:
-        means_counts = engine.classwise_means_all()
+        means_counts = engine.classwise_means_all(**kw)
         teacher_by_class, valid_by_class = server.aggregate_classwise(
-            means_counts, count_weighted=method.count_weighted)
+            means_counts, count_weighted=method.count_weighted,
+            uploaded_rows=part)
         distill_losses = engine.distill_private_all(
             teacher_by_class, valid_by_class, cfg.distill_epochs,
-            cfg.batch_size)
+            cfg.batch_size, **kw)
     else:
         idx = server.select_indices(cfg.proxy_batch)      # line 13
         px = server.proxy.x[idx]
         powner = server.proxy.owner[idx]
-        logits, masks = engine.proxy_logits_and_masks(px, powner)
-        id_frac = float(masks.mean())
-        teacher, valid = server.aggregate(                 # line 15
-            logits, masks, sharpen=method.sharpen,
-            entropy_filter=method.server_filter)
+        logits, masks = engine.proxy_logits_and_masks(px, powner, **kw)
+        if part is None:
+            id_frac = float(masks.mean())
+            teacher, valid = server.aggregate(             # line 15
+                logits, masks, sharpen=method.sharpen,
+                entropy_filter=method.server_filter)
+        else:
+            # ID fraction over the clients that actually reported; the
+            # merged rows below additionally carry stale reuse
+            id_frac = float(masks[part].mean())
+            merged = server.merge_stale(r, part, idx, logits, masks,
+                                        decay=cfg.staleness_decay)
+            mean_staleness = merged.mean_staleness
+            teacher, valid = server.aggregate(             # line 15
+                merged.logits, merged.masks, sharpen=method.sharpen,
+                entropy_filter=method.server_filter,
+                client_weights=merged.client_weights, uploaded_rows=part)
         w = valid.astype(np.float32)
         distill_losses = engine.distill_all(               # line 16 / 38–43
-            px, teacher, w, cfg.distill_epochs, cfg.batch_size)
+            px, teacher, w, cfg.distill_epochs, cfg.batch_size, **kw)
 
     accs = engine.evaluate_all(x_test, y_test)
     if transient and hasattr(engine, "sync_to_clients"):
@@ -221,6 +299,9 @@ def run_round(r: int, clients, server: "Server", method: Method,
         bytes_up=server.bytes_received,
         bytes_down=server.bytes_broadcast,
         wall_s=time.perf_counter() - t0,
+        participants=(None if part is None
+                      else [int(i) for i in np.flatnonzero(part)]),
+        mean_staleness=mean_staleness,
     )
 
 

@@ -1,4 +1,4 @@
-from repro.data.synthetic import Dataset, make_dataset, SPECS
 from repro.data.partition import ClientData, partition
 from repro.data.proxy import ProxyData, build_proxy, select_round_indices
+from repro.data.synthetic import SPECS, Dataset, make_dataset
 from repro.data.tokens import MarkovTokenStream, synth_frames, synth_vision

@@ -46,7 +46,7 @@ def partition(x, y, *, num_clients: int, num_classes: int, scenario: str,
         chunks = np.array_split(perm, num_clients)
         for c in range(num_clients):
             labels = np.sort(chunks[c])
-            idx = np.concatenate([idx_by_label[l] for l in labels])
+            idx = np.concatenate([idx_by_label[lab] for lab in labels])
             rng.shuffle(idx)
             out.append(ClientData(x[idx], y[idx], labels))
 
@@ -56,19 +56,20 @@ def partition(x, y, *, num_clients: int, num_classes: int, scenario: str,
         for c in range(num_clients):
             labels = rng.choice(num_classes, size=labels_per_client, replace=False)
             client_labels.append(np.sort(labels))
-            for l in labels:
-                holders[l].append(c)
+            for lab in labels:
+                holders[lab].append(c)
         # ensure every class has ≥1 holder so data isn't orphaned
-        for l in range(num_classes):
-            if not holders[l]:
+        for lab in range(num_classes):
+            if not holders[lab]:
                 c = int(rng.integers(num_clients))
-                holders[l].append(c)
-                client_labels[c] = np.sort(np.append(client_labels[c], l))
+                holders[lab].append(c)
+                client_labels[c] = np.sort(np.append(client_labels[c], lab))
         buckets = [[] for _ in range(num_clients)]
-        for l in range(num_classes):
-            idx = idx_by_label[l].copy()
+        for lab in range(num_classes):
+            idx = idx_by_label[lab].copy()
             rng.shuffle(idx)
-            for part, c in zip(np.array_split(idx, len(holders[l])), holders[l]):
+            for part, c in zip(np.array_split(idx, len(holders[lab])),
+                               holders[lab]):
                 buckets[c].append(part)
         for c in range(num_clients):
             idx = np.concatenate(buckets[c]) if buckets[c] else np.array([], np.int64)

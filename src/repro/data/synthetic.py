@@ -90,7 +90,8 @@ def make_dataset(name: str, *, n_train: int = 5000, n_test: int = 1000,
             return img.reshape(-1, spec.image_hw, spec.image_hw, spec.channels)
         x_tr, x_te = render(z_tr), render(z_te)
     else:
-        dec = jax.random.normal(k_dec, (spec.latent_dim, spec.feature_dim)) / jnp.sqrt(spec.latent_dim)
+        dec = (jax.random.normal(k_dec, (spec.latent_dim, spec.feature_dim))
+               / jnp.sqrt(spec.latent_dim))
         x_tr, x_te = z_tr @ dec, z_te @ dec
 
     return Dataset(x=x_tr, y=y_tr, x_test=x_te, y_test=y_te,

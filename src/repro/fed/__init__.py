@@ -1,6 +1,6 @@
-from repro.fed.client import Client
-from repro.fed.server import Server
-from repro.fed.cohort import CohortEngine
-from repro.fed.batching import epoch_batches, steps_per_epoch
-from repro.fed.mesh import build_client_mesh
 from repro.fed import simulator
+from repro.fed.batching import epoch_batches, steps_per_epoch
+from repro.fed.client import Client
+from repro.fed.cohort import CohortEngine
+from repro.fed.mesh import build_client_mesh
+from repro.fed.server import Server

@@ -43,6 +43,18 @@ rows are sliced off before any result leaves the engine. Outputs of the
 jitted phases are pinned back to the client axis via the logical-rules
 machinery in ``repro.models.sharding`` (logical axis ``"clients"``), so
 params/opt-state never decay to a single device between rounds.
+
+Partial participation
+---------------------
+Every round phase accepts a per-round participation mask
+(``repro.fed.participation``). Sampled-out clients ride along as *no-op
+lanes*: their step-validity flags stay all-False — the same
+``_where_tree`` gating that freezes dummy padding clients — their rng
+streams are not advanced (keeping loop↔cohort parity), and their
+logits/mask rows are zeroed before leaving the engine. The mask changes
+only data, never array shapes, so sampling a different subset each round
+reuses every compiled phase, and it composes with mesh padding (a dummy
+row is simply a lane no mask ever validates).
 """
 from __future__ import annotations
 
@@ -454,9 +466,18 @@ class _Cohort:
 
     # ----------------------------------------------------------- round phases
     def _plan(self, draw_n: int, epochs: int, batch_size: int,
-              weight=None) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+              weight=None, part=None
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Draw per-client epoch permutations (advancing each client's rng
-        exactly as the loop engine would) and pack them into fixed arrays."""
+        exactly as the loop engine would) and pack them into fixed arrays.
+
+        ``part`` (len(members),) bool marks this round's participants:
+        sampled-out members draw no permutation (their rng stream stays in
+        lockstep with the loop engine, which skips them entirely) and keep
+        all-False step validity — the same ``_where_tree`` no-op gating
+        that freezes dummy padding clients. The plan arrays keep their
+        shapes either way, so a changing subset never retraces a phase.
+        """
         C = len(self.members)
         if draw_n >= 0:
             ns = [draw_n] * C          # shared proxy set
@@ -469,6 +490,8 @@ class _Cohort:
         w = np.zeros((self.c_pad, steps, batch_size), np.float32)
         valid = np.zeros((self.c_pad, steps), bool)
         for i, c in enumerate(self.members):
+            if part is not None and not part[i]:
+                continue               # no-op lane this round
             perms = [c.rng.permutation(ns[i]) for _ in range(epochs)]
             idx[i], w[i], valid[i] = padded_epoch_plan(perms, batch_size, steps)
         if weight is not None:
@@ -482,8 +505,9 @@ class _Cohort:
         tot = (losses * valid).sum(axis=1)
         return [float(t / c) if c else 0.0 for t, c in zip(tot, cnt)]
 
-    def local_train(self, epochs: int, batch_size: int) -> List[float]:
-        idx, w, valid = self._plan(-1, epochs, batch_size)
+    def local_train(self, epochs: int, batch_size: int,
+                    part=None) -> List[float]:
+        idx, w, valid = self._plan(-1, epochs, batch_size, part=part)
         with self._ctx():
             self.params, self.opt_state, losses = self._train(
                 self.params, self.opt_state, self.x, self.y,
@@ -492,8 +516,9 @@ class _Cohort:
         return self._mean_losses(np.asarray(losses)[:C], valid[:C])
 
     def distill(self, px, teacher, weight, epochs: int,
-                batch_size: int) -> List[float]:
-        idx, w, valid = self._plan(len(px), epochs, batch_size, weight=weight)
+                batch_size: int, part=None) -> List[float]:
+        idx, w, valid = self._plan(len(px), epochs, batch_size, weight=weight,
+                                   part=part)
         with self._ctx():
             self.params, self.opt_state, losses = self._distill(
                 self.params, self.opt_state,
@@ -503,8 +528,8 @@ class _Cohort:
         return self._mean_losses(np.asarray(losses)[:C], valid[:C])
 
     def distill_private(self, teacher_by_class, valid_by_class, epochs: int,
-                        batch_size: int) -> List[float]:
-        idx, w, valid = self._plan(-1, epochs, batch_size)
+                        batch_size: int, part=None) -> List[float]:
+        idx, w, valid = self._plan(-1, epochs, batch_size, part=part)
         with self._ctx():
             self.params, self.opt_state, losses = self._distill_private(
                 self.params, self.opt_state, self.x, self.y,
@@ -514,32 +539,53 @@ class _Cohort:
         C = len(self.members)
         return self._mean_losses(np.asarray(losses)[:C], valid[:C])
 
-    def classwise_means(self):
+    def classwise_means(self, part=None):
         with self._ctx():
             means, counts = self._classwise(self.params, self.x, self.y,
                                             self.sample_mask)
         means, counts = np.asarray(means), np.asarray(counts)
+        if part is not None:
+            # sampled-out members report nothing (zero counts drop them
+            # from the classwise fuse exactly like the loop engine's skip)
+            means, counts = means.copy(), counts.copy()
+            means[~np.asarray(part, bool)] = 0.0
+            counts[~np.asarray(part, bool)] = 0.0
         return [(means[i], counts[i]) for i in range(len(self.members))]
 
-    def proxy_logits(self, px) -> np.ndarray:
+    def proxy_logits(self, px, part=None) -> np.ndarray:
         with self._ctx():
             out = self._predict(self.params, self._put_rep(px))
-        return np.asarray(out)[: len(self.members)]
+        out = np.asarray(out)[: len(self.members)]
+        if part is not None:
+            out = out.copy()
+            out[~np.asarray(part, bool)] = 0.0
+        return out
 
-    def filter_masks(self, px, powner) -> np.ndarray:
+    def filter_masks(self, px, powner, part=None) -> np.ndarray:
         t = len(px)
+        part = None if part is None else np.asarray(part, bool)
+
+        def gated(masks):
+            if part is not None:
+                masks = masks.copy()
+                masks[~part] = False     # sampled-out clients report nothing
+            return masks
+
         if self.filter_kind == "none" \
                 and all(c.dre is None for c in self.members):
-            return np.ones((len(self.members), t), bool)
+            return gated(np.ones((len(self.members), t), bool))
         if self.filter_kind in ("none", "loop"):
             # "none" with any DRE present means no state was learned or
             # packed (e.g. a transient engine over unlearned clients, or a
             # mixed some-have-DREs cohort): defer to the per-client path so
             # it behaves exactly like the loop engine — including failing
             # loudly on unlearned estimators instead of silently returning
-            # all-True masks
-            return np.stack([np.asarray(c.filter_mask(px, powner).mask)
-                             for c in self.members])
+            # all-True masks (sampled-out members are skipped, again like
+            # the loop engine)
+            return np.stack([
+                np.asarray(c.filter_mask(px, powner).mask)
+                if part is None or part[i] else np.zeros((t,), bool)
+                for i, c in enumerate(self.members)])
         pxf = self._put_rep(np.asarray(px).reshape(t, -1))
         owner = self._put_rep(powner)
         # dummy rows get cid -1 (never an owner), their masks are sliced off
@@ -555,7 +601,7 @@ class _Cohort:
                                            st["private"], st["n"],
                                            st["thresholds"], cids,
                                            st["sigma"], st["lam"], pxf, owner)
-        return np.asarray(masks)[: len(self.members)]
+        return gated(np.asarray(masks)[: len(self.members)])
 
     def evaluate(self, x_test, y_test, batch_size: int = 512) -> List[float]:
         """Masked fixed-shape eval: the tail batch is padded to ``batch_size``
@@ -586,9 +632,10 @@ class _Cohort:
         if self.mesh is not None:
             # gather through host first: rows of a mesh-sharded stack live on
             # different devices, but clients expect default-device arrays
-            params = jax.tree.map(lambda l: jnp.asarray(np.asarray(l)), params)
-            opt_state = jax.tree.map(lambda l: jnp.asarray(np.asarray(l)),
-                                     opt_state)
+            params = jax.tree.map(lambda leaf: jnp.asarray(np.asarray(leaf)),
+                                  params)
+            opt_state = jax.tree.map(
+                lambda leaf: jnp.asarray(np.asarray(leaf)), opt_state)
         for i, c in enumerate(self.members):
             c.params = _unstack_tree(params, i)
             c.opt_state = _unstack_tree(opt_state, i)
@@ -633,37 +680,61 @@ class CohortEngine:
                 out[pos] = v
         return out
 
+    def _part_for(self, cohort, participants):
+        """Slice a global participation mask down to one cohort's members
+        (the cohort composes it with its own dummy-padding validity)."""
+        if participants is None:
+            return None
+        part = np.asarray(participants, bool)
+        if part.shape != (len(self.clients),):
+            raise ValueError(
+                f"participation mask shape {part.shape} != "
+                f"({len(self.clients)},)")
+        return part[cohort.positions]
+
     def learn_dres(self, key) -> None:
         for cohort in self.cohorts:
             cohort.learn_dres(key)
 
-    def local_train_all(self, epochs: int, batch_size: int) -> List[float]:
-        return self._scatter([c.local_train(epochs, batch_size)
-                              for c in self.cohorts])
+    def local_train_all(self, epochs: int, batch_size: int,
+                        participants=None) -> List[float]:
+        return self._scatter(
+            [c.local_train(epochs, batch_size,
+                           part=self._part_for(c, participants))
+             for c in self.cohorts])
 
-    def classwise_means_all(self):
-        return self._scatter([c.classwise_means() for c in self.cohorts])
+    def classwise_means_all(self, participants=None):
+        return self._scatter(
+            [c.classwise_means(part=self._part_for(c, participants))
+             for c in self.cohorts])
 
-    def proxy_logits_and_masks(self, px, powner):
+    def proxy_logits_and_masks(self, px, powner, participants=None):
         t = len(px)
         k = self.clients[0].num_classes
         logits = np.zeros((len(self.clients), t, k), np.float32)
         masks = np.zeros((len(self.clients), t), bool)
         for cohort in self.cohorts:
-            logits[cohort.positions] = cohort.proxy_logits(px)
-            masks[cohort.positions] = cohort.filter_masks(px, powner)
+            part = self._part_for(cohort, participants)
+            logits[cohort.positions] = cohort.proxy_logits(px, part=part)
+            masks[cohort.positions] = cohort.filter_masks(px, powner,
+                                                          part=part)
         return logits, masks
 
     def distill_all(self, px, teacher, weight, epochs: int,
-                    batch_size: int) -> List[float]:
-        return self._scatter([c.distill(px, teacher, weight, epochs, batch_size)
-                              for c in self.cohorts])
+                    batch_size: int, participants=None) -> List[float]:
+        return self._scatter(
+            [c.distill(px, teacher, weight, epochs, batch_size,
+                       part=self._part_for(c, participants))
+             for c in self.cohorts])
 
     def distill_private_all(self, teacher_by_class, valid_by_class,
-                            epochs: int, batch_size: int) -> List[float]:
+                            epochs: int, batch_size: int,
+                            participants=None) -> List[float]:
         return self._scatter(
             [c.distill_private(teacher_by_class, valid_by_class, epochs,
-                               batch_size) for c in self.cohorts])
+                               batch_size,
+                               part=self._part_for(c, participants))
+             for c in self.cohorts])
 
     def evaluate_all(self, x_test, y_test) -> List[float]:
         return self._scatter([c.evaluate(x_test, y_test)

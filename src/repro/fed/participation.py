@@ -1,0 +1,188 @@
+"""Round scheduler: partial participation + staleness-aware reuse.
+
+The paper evaluates EdgeFD with every client reporting soft logits every
+round, but its target deployment — resource-constrained edge devices — is
+exactly the regime where clients drop in and out and report stale
+knowledge. This module supplies the two missing pieces:
+
+``sample_participants``
+    Draws the subset of clients that trains and reports in round ``r``.
+    Three policies, all deterministic in ``(seed, round)`` so every
+    execution engine (loop / cohort / mesh-sharded cohort) sees the same
+    subset and their round logs stay comparable:
+
+      * ``uniform``    — without replacement, every client equally likely;
+      * ``weighted``   — without replacement, P(client) ∝ private-set size
+                         (larger shards report more often, FedAvg-style);
+      * ``roundrobin`` — deterministic rotating block: round ``r`` takes
+                         clients ``[r·k, r·k + k) mod C``, so every client
+                         participates exactly once per ``ceil(C / k)``
+                         rounds.
+
+``StalenessBuffer``
+    Server-side memory of each client's *last-reported* proxy logits and
+    ID masks. Non-participants do not recompute logits; the buffer fills
+    their rows with the cached report (on the proxy indices the server
+    selected this round) and hands ``Server.aggregate`` a per-client
+    weight ``staleness_decay ** age`` where ``age`` is the number of
+    rounds since the client last reported:
+
+      * ``staleness_decay = 0`` — stale reports get weight ``0**age = 0``
+        (fresh reports keep ``0**0 = 1``): non-participants are silently
+        dropped from the teacher;
+      * ``staleness_decay = 1`` — stale reports keep full weight:
+        FedBuff-style unlimited reuse of the last report;
+      * in between — geometric down-weighting of old knowledge.
+
+The engines keep sampled-out clients as *no-op lanes*: the cohort engine
+reuses the ``_where_tree`` validity gating that already freezes dummy
+padding clients, so a changing subset changes only data (never shapes)
+and retriggers no compilation, and the mask composes with mesh padding.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+PARTICIPATION_POLICIES = ("uniform", "weighted", "roundrobin")
+
+
+def validate_config(cfg) -> None:
+    """Fail fast on an inconsistent participation config (FedConfig-like)."""
+    f = cfg.participation_fraction
+    if not 0.0 < f <= 1.0:
+        raise ValueError(
+            f"participation_fraction must be in (0, 1], got {f!r}")
+    if cfg.participation_policy not in PARTICIPATION_POLICIES:
+        raise ValueError(
+            f"unknown participation_policy {cfg.participation_policy!r}; "
+            f"known: {', '.join(PARTICIPATION_POLICIES)}")
+    if not 0.0 <= cfg.staleness_decay <= 1.0:
+        raise ValueError(
+            f"staleness_decay must be in [0, 1], got {cfg.staleness_decay!r}")
+
+
+def cohort_size(num_clients: int, fraction: float) -> int:
+    """Participants per round: round(fraction · C), clamped to [1, C]."""
+    return int(min(max(round(fraction * num_clients), 1), num_clients))
+
+
+def round_rng(seed: int, round_idx: int) -> np.random.Generator:
+    """The round key: an rng derived from (seed, round) and nothing else,
+    so sampling never perturbs the client/server rng streams (legacy logs
+    stay bit-for-bit identical at participation_fraction=1)."""
+    return np.random.default_rng(
+        np.random.SeedSequence([seed % 2**32, round_idx, 0x5EED]))
+
+
+def sample_participants(round_idx: int, num_clients: int, fraction: float,
+                        policy: str = "uniform", *, seed: int = 0,
+                        data_sizes: Optional[np.ndarray] = None
+                        ) -> np.ndarray:
+    """Boolean participation mask of shape ``(num_clients,)`` for one round.
+
+    ``data_sizes`` (per-client private-set sizes) is required by the
+    ``weighted`` policy and ignored by the others.
+    """
+    if policy not in PARTICIPATION_POLICIES:
+        raise ValueError(f"unknown participation policy {policy!r}; "
+                         f"known: {', '.join(PARTICIPATION_POLICIES)}")
+    if not 0.0 < fraction <= 1.0:
+        raise ValueError(f"fraction must be in (0, 1], got {fraction!r}")
+    k = cohort_size(num_clients, fraction)
+    mask = np.zeros((num_clients,), bool)
+    if k == num_clients:
+        mask[:] = True
+        return mask
+    if policy == "roundrobin":
+        ids = (round_idx * k + np.arange(k)) % num_clients
+    elif policy == "uniform":
+        ids = round_rng(seed, round_idx).choice(num_clients, size=k,
+                                                replace=False)
+    else:  # weighted
+        if data_sizes is None:
+            raise ValueError(
+                "policy='weighted' needs per-client data_sizes")
+        sizes = np.asarray(data_sizes, np.float64)
+        if sizes.shape != (num_clients,) or np.any(sizes < 0):
+            raise ValueError(
+                f"data_sizes must be {num_clients} non-negative sizes, got "
+                f"shape {sizes.shape}")
+        if np.count_nonzero(sizes) < k:
+            raise ValueError(
+                f"policy='weighted' cannot draw {k} of "
+                f"{np.count_nonzero(sizes)} clients with data; shrink "
+                "participation_fraction or give every client samples")
+        ids = round_rng(seed, round_idx).choice(
+            num_clients, size=k, replace=False, p=sizes / sizes.sum())
+    mask[ids] = True
+    return mask
+
+
+class StaleMerge(NamedTuple):
+    """Result of ``StalenessBuffer.merge`` — inputs with stale rows filled."""
+    logits: np.ndarray          # (C, t, K) fresh or last-reported logits
+    masks: np.ndarray           # (C, t) fresh or last-reported ID masks
+    client_weights: np.ndarray  # (C,) staleness_decay ** age
+    mean_staleness: float       # mean age over clients that ever reported
+
+
+class StalenessBuffer:
+    """Per-client cache of the last-reported proxy logits and ID masks.
+
+    The cache is indexed by *proxy-dataset position*: when a client
+    participates, its fresh logits/masks land at this round's selected
+    indices; when it sits out, the merge reads whatever it last reported
+    at the indices selected now. Entries a client never reported stay
+    masked out, so a client contributes exactly the knowledge it actually
+    uploaded — nothing is fabricated.
+    """
+
+    def __init__(self, num_clients: int, proxy_size: int, num_classes: int):
+        self.logits = np.zeros((num_clients, proxy_size, num_classes),
+                               np.float32)
+        self.masks = np.zeros((num_clients, proxy_size), bool)
+        self.reported = np.zeros((num_clients,), bool)   # ever reported
+        self.last_round = np.zeros((num_clients,), np.int64)
+
+    def merge(self, round_idx: int, participants, idx, logits, masks,
+              decay: float) -> StaleMerge:
+        """Record fresh reports, fill non-participant rows from the cache.
+
+        ``participants``: (C,) bool; ``idx``: this round's proxy indices;
+        ``logits``/``masks``: engine outputs whose non-participant rows are
+        zeros/False (they are replaced here). Returns the merged arrays
+        plus the per-client weights ``decay ** age`` for aggregation.
+        """
+        part = np.asarray(participants, bool)
+        logits = np.asarray(logits, np.float32)
+        masks = np.asarray(masks, bool)
+        idx = np.asarray(idx)
+        for c in np.flatnonzero(part):
+            self.logits[c, idx] = logits[c]
+            self.masks[c, idx] = masks[c]
+        self.reported[part] = True
+        self.last_round[part] = round_idx
+        if part.all():
+            # identity fast path: everything is fresh — hand back the exact
+            # input arrays so fraction=1 reproduces the legacy logs
+            # bit-for-bit
+            return StaleMerge(logits, masks,
+                              np.ones((len(part),), np.float32), 0.0)
+        merged_logits = np.where(part[:, None, None], logits,
+                                 self.logits[:, idx])
+        merged_masks = np.where(part[:, None], masks, self.masks[:, idx])
+        ages = np.where(part, 0, round_idx - self.last_round)
+        # never-reported clients have all-False cached masks, so their
+        # weight is irrelevant; zero it anyway to keep the record honest
+        weights = np.where(self.reported,
+                           np.power(float(decay), ages), 0.0)
+        # mean age of the reports that actually reach aggregation: a
+        # weight-zero report (decay=0 and stale, or never reported) is
+        # dropped from the teacher, so its age must not inflate the metric
+        contributing = self.reported & (weights > 0.0)
+        mean_age = (float(ages[contributing].mean())
+                    if contributing.any() else 0.0)
+        return StaleMerge(merged_logits, merged_masks,
+                          weights.astype(np.float32), mean_age)

@@ -2,7 +2,7 @@
 never trains a model (EdgeFD needs no pre-trained teacher)."""
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +10,7 @@ import numpy as np
 from repro.core import aggregation
 from repro.core.filtering import server_entropy_filter
 from repro.data.proxy import ProxyData, select_round_indices
+from repro.fed.participation import StaleMerge, StalenessBuffer
 
 
 class Server:
@@ -18,27 +19,63 @@ class Server:
         self.rng = np.random.default_rng(seed + 7)
         self.bytes_received = 0
         self.bytes_broadcast = 0
+        # lazily-sized staleness buffer (partial participation only): the
+        # last report of every client, by proxy-dataset position
+        self._stale: Optional[StalenessBuffer] = None
 
     def select_indices(self, batch: int) -> np.ndarray:
         return select_round_indices(self.rng, self.proxy, batch)
 
+    def merge_stale(self, round_idx: int, participants, idx, logits, masks,
+                    *, decay: float) -> StaleMerge:
+        """Record this round's fresh reports and fill non-participant rows
+        from each client's last report (``repro.fed.participation``)."""
+        if self._stale is None:
+            c, _, k = np.asarray(logits).shape
+            self._stale = StalenessBuffer(c, len(self.proxy.x), k)
+        return self._stale.merge(round_idx, participants, idx, logits, masks,
+                                 decay)
+
     def aggregate(self, logits, masks, *, sharpen: Optional[float] = None,
-                  entropy_filter: bool = False):
-        """logits: (C, t, K); masks: (C, t). Returns (teacher, valid)."""
+                  entropy_filter: bool = False, client_weights=None,
+                  uploaded_rows=None):
+        """logits: (C, t, K); masks: (C, t). Returns (teacher, valid).
+
+        ``client_weights`` (C,) down-weights stale contributions by
+        ``staleness_decay ** age`` (all-ones — every report fresh — takes
+        the plain masked-mean path, bit-for-bit the legacy teacher).
+        ``uploaded_rows`` (C,) restricts the upload accounting to clients
+        that actually reported this round: stale reuse costs no bytes.
+        """
         logits = jnp.asarray(logits)
         masks = jnp.asarray(masks)
         if entropy_filter:  # Selective-FD baseline's extra server stage
             masks = server_entropy_filter(logits, masks)
-        teacher, valid = aggregation.masked_mean_logits(
-            logits, masks, temperature_sharpen=sharpen)
-        # accounting: clients upload only ID logits (mask-compressed)
+        cw = (None if client_weights is None
+              else np.asarray(client_weights, np.float32))
+        if cw is not None and not bool(np.all(cw == 1.0)):
+            teacher, valid = aggregation.weighted_masked_mean_logits(
+                logits, masks, jnp.asarray(cw), temperature_sharpen=sharpen)
+        else:
+            teacher, valid = aggregation.masked_mean_logits(
+                logits, masks, temperature_sharpen=sharpen)
+        # accounting: clients upload only ID logits (mask-compressed), and
+        # only the round's participants upload at all
         k = logits.shape[-1]
-        self.bytes_received += int(jnp.sum(masks)) * k * 4
+        up = (masks if uploaded_rows is None
+              else masks[np.asarray(uploaded_rows, bool)])
+        self.bytes_received += int(jnp.sum(up)) * k * 4
         self.bytes_broadcast += int(teacher.shape[0]) * k * 4
         return np.asarray(teacher), np.asarray(valid)
 
-    def aggregate_classwise(self, means_counts, *, count_weighted: bool):
-        """FKD/PLS: fuse per-class mean logits from all clients."""
+    def aggregate_classwise(self, means_counts, *, count_weighted: bool,
+                            uploaded_rows=None):
+        """FKD/PLS: fuse per-class mean logits from all clients.
+
+        ``uploaded_rows`` (C,) restricts the upload accounting to this
+        round's participants (sampled-out clients hand in zero counts and
+        upload nothing); ``None`` keeps the legacy everyone-uploads count.
+        """
         means = jnp.stack([m for m, _ in means_counts])     # (C, K_cls, K)
         counts = jnp.stack([c for _, c in means_counts])    # (C, K_cls)
         if count_weighted:
@@ -47,5 +84,7 @@ class Server:
             w = (counts > 0).astype(jnp.float32)[..., None]
         teacher = jnp.sum(means * w, axis=0) / jnp.maximum(jnp.sum(w, axis=0), 1.0)
         valid = jnp.sum(counts, axis=0) > 0
-        self.bytes_received += int(np.prod(means.shape)) * 4
+        reporting = (means.shape[0] if uploaded_rows is None
+                     else int(np.asarray(uploaded_rows, bool).sum()))
+        self.bytes_received += reporting * int(np.prod(means.shape[1:])) * 4
         return np.asarray(teacher), np.asarray(valid)

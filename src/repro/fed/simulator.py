@@ -19,6 +19,7 @@ from repro.core.protocol import (ExperimentResult, engine_from_config,
 from repro.data.partition import partition
 from repro.data.proxy import build_proxy
 from repro.data.synthetic import make_dataset
+from repro.fed import participation
 from repro.fed.client import Client
 from repro.fed.server import Server
 from repro.models.cnn import MLPClassifier, get_client_model
@@ -99,6 +100,8 @@ def build_engine(clients: List[Client], cfg: FedConfig):
 def run(cfg: FedConfig, dataset_name: str = "mnist_feat", *,
         n_train: int = 5000, n_test: int = 1000, progress=None
         ) -> ExperimentResult:
+    # fail fast on a bad participation config, before any client is built
+    participation.validate_config(cfg)
     clients, server, x_test, y_test = build_experiment(
         cfg, dataset_name, n_train=n_train, n_test=n_test)
     engine = build_engine(clients, cfg)

@@ -4,4 +4,4 @@ Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 public wrapper), ref.py (pure-jnp oracle). Validated with interpret=True
 on CPU; lowered by Mosaic on TPU.
 """
-from repro.kernels import kmeans_dist, kulsif_rbf, distill_kl, flash_attention
+from repro.kernels import distill_kl, flash_attention, kmeans_dist, kulsif_rbf

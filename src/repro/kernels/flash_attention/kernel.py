@@ -68,8 +68,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(ki == num_kv_blocks - 1)
     def _finalize():
-        l = l_scr[...]
-        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        lsum = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(lsum, 1e-30)[:, None]
                        ).astype(o_ref.dtype)
 
 

@@ -28,7 +28,7 @@ from repro.launch.hlo_analysis import collective_bytes_corrected  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
 from repro.models.layers import set_attention_options  # noqa: E402
 from repro.models.ssm import set_slstm_unroll  # noqa: E402
-from repro.models.sharding import set_logical_rules, DEFAULT_RULES, PROFILES  # noqa: E402
+from repro.models.sharding import DEFAULT_RULES, PROFILES, set_logical_rules  # noqa: E402
 from repro.optim.optimizers import adamw  # noqa: E402
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,20 @@ def main(argv=None):
                          "exactly N (CPU hosts: set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N). "
                          "Requires --engine cohort")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of clients sampled each round "
+                         "(participation_fraction; 1.0 = every client "
+                         "reports every round, the paper's setting)")
+    ap.add_argument("--policy", default="uniform",
+                    choices=["uniform", "weighted", "roundrobin"],
+                    help="how the per-round participant subset is drawn "
+                         "(seeded from (seed, round)): uniform without "
+                         "replacement, weighted by private-set size, or a "
+                         "deterministic rotating block")
+    ap.add_argument("--staleness-decay", type=float, default=0.0,
+                    help="non-participants keep their last-reported proxy "
+                         "logits, down-weighted by decay**age: 0 = drop "
+                         "them silently, 1 = FedBuff-style full reuse")
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--proxy-fraction", type=float, default=0.2)
@@ -53,12 +67,20 @@ def main(argv=None):
         seed=args.seed,
         engine=args.engine,
         num_devices=args.devices,
+        participation_fraction=args.participation,
+        participation_policy=args.policy,
+        staleness_decay=args.staleness_decay,
     )
 
     def progress(log):
+        extra = ""
+        if log.participants is not None:
+            extra = (f"  part={len(log.participants)}/{args.clients}"
+                     f"  stale={log.mean_staleness:.2f}")
         print(f"round {log.round:3d}  acc={log.mean_acc:.4f}  "
               f"id={log.id_fraction:.2f}  local={log.local_loss:.3f}  "
-              f"distill={log.distill_loss:.3f}  up={log.bytes_up/1e6:.1f}MB")
+              f"distill={log.distill_loss:.3f}  "
+              f"up={log.bytes_up/1e6:.1f}MB{extra}")
 
     res = simulator.run(cfg, args.dataset, n_train=args.n_train,
                         n_test=args.n_test, progress=progress)

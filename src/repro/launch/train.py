@@ -18,7 +18,7 @@ from repro.configs import ARCHS, get_arch, reduced as reduce_cfg
 from repro.data.tokens import MarkovTokenStream, synth_frames, synth_vision
 from repro.launch import mesh as M
 from repro.models import transformer as T
-from repro.models.sharding import set_logical_rules, DEFAULT_RULES
+from repro.models.sharding import DEFAULT_RULES, set_logical_rules
 from repro.optim.optimizers import adamw
 from repro.optim.schedules import linear_warmup_cosine
 

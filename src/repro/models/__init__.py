@@ -1,1 +1,1 @@
-from repro.models import layers, moe, rglru, ssm, transformer, cnn, sharding
+from repro.models import cnn, layers, moe, rglru, sharding, ssm, transformer

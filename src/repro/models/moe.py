@@ -24,7 +24,8 @@ def init_moe(key, d_model: int, d_ff: int, num_experts: int, dtype=jnp.float32):
         "router": (jax.random.normal(kr, (d_model, num_experts)) * std).astype(dtype),
         "wg": (jax.random.normal(kg, (num_experts, d_model, d_ff)) * std).astype(dtype),
         "wu": (jax.random.normal(ku, (num_experts, d_model, d_ff)) * std).astype(dtype),
-        "wd": (jax.random.normal(kd, (num_experts, d_ff, d_model)) * (1.0 / math.sqrt(d_ff))).astype(dtype),
+        "wd": (jax.random.normal(kd, (num_experts, d_ff, d_model))
+               * (1.0 / math.sqrt(d_ff))).astype(dtype),
     }
 
 

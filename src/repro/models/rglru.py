@@ -44,7 +44,8 @@ def init_rglru(key, d_model: int, dtype=jnp.float32):
         "br": jnp.zeros((d_rnn,), dtype),
         "wi": (jax.random.normal(jax.random.fold_in(ks[4], 1), (d_rnn, d_rnn)) * std).astype(dtype),
         "bi": jnp.zeros((d_rnn,), dtype),
-        "wout": (jax.random.normal(jax.random.fold_in(ks[4], 2), (d_rnn, d_model)) * std).astype(dtype),
+        "wout": (jax.random.normal(jax.random.fold_in(ks[4], 2),
+                                   (d_rnn, d_model)) * std).astype(dtype),
     }
 
 

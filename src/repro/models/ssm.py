@@ -136,10 +136,13 @@ def mlstm_forward(p, x, num_heads: int, *, chunk: int = CHUNK, eps: float = 1e-5
     L = min(chunk, s)
     pad = (-s) % L
     if pad:
-        padf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        def padf(a):
+            return jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
         q, k, v, log_i, log_f = map(padf, (q, k, v, log_i, log_f))
     nc = (s + pad) // L
-    resh = lambda a: a.reshape((b, nc, L) + a.shape[2:])
+
+    def resh(a):
+        return a.reshape((b, nc, L) + a.shape[2:])
     qs, ks, vs, lis, lfs = map(resh, (q, k, v, log_i, log_f))
 
     def body(state, inp):
@@ -202,7 +205,8 @@ def init_slstm(key, d_model: int, num_heads: int, dtype=jnp.float32):
         "norm2": init_rmsnorm(d_model, dtype),
         "wup": (jax.random.normal(ks[8], (d_model, d_ff)) * std).astype(dtype),
         "wgate": (jax.random.normal(ks[9], (d_model, d_ff)) * std).astype(dtype),
-        "wdown": (jax.random.normal(ks[10], (d_ff, d_model)) * (1.0 / math.sqrt(d_ff))).astype(dtype),
+        "wdown": (jax.random.normal(ks[10], (d_ff, d_model))
+                  * (1.0 / math.sqrt(d_ff))).astype(dtype),
     }
     return p
 
@@ -224,7 +228,9 @@ def _slstm_step(p, num_heads, state: SLSTMState, zi_fi_oi):
     wz, wi, wf, wo = zi_fi_oi
     b, d = state.h.shape
     hprev = state.h.reshape(b, num_heads, -1)
-    rec = lambda r: jnp.einsum("bnh,nhg->bng", hprev, r).reshape(b, d)
+
+    def rec(r):
+        return jnp.einsum("bnh,nhg->bng", hprev, r).reshape(b, d)
     z = jnp.tanh(wz + rec(p["rz"]))
     i_pre = (wi + rec(p["ri"])).astype(jnp.float32)
     f_pre = (wf + rec(p["rf"])).astype(jnp.float32)
@@ -269,7 +275,9 @@ def _local_step(recs, state, num_heads):
 def _recs(rmats, hprev, wx_t, num_heads):
     b, d = hprev.shape
     hh = hprev.reshape(b, num_heads, -1)
-    rec = lambda r: jnp.einsum("bnh,nhg->bng", hh, r).reshape(b, d)
+
+    def rec(r):
+        return jnp.einsum("bnh,nhg->bng", hh, r).reshape(b, d)
     return tuple(w + rec(r) for w, r in zip(wx_t, rmats))
 
 

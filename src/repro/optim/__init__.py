@@ -1,2 +1,3 @@
-from repro.optim.optimizers import sgd, adamw, apply_updates, clip_by_global_norm
+from repro.optim.optimizers import (adamw, apply_updates,
+                                    clip_by_global_norm, sgd)
 from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine

@@ -61,7 +61,8 @@ def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         return x.astype(state_dtype) if state_dtype is not None else x
 
     def init(params):
-        z = lambda p: _cast(jnp.zeros_like(p, dtype=jnp.float32))
+        def z(p):
+            return _cast(jnp.zeros_like(p, dtype=jnp.float32))
         return {"m": jax.tree.map(z, params),
                 "v": jax.tree.map(z, params),
                 "step": jnp.zeros((), jnp.int32)}

@@ -18,7 +18,10 @@ TOL = dict(rtol=0.0, atol=1e-5)
 
 
 def check_parity(num_clients: int, devices: int, method: str = "edgefd",
-                 scenario: str = "strong") -> None:
+                 scenario: str = "strong",
+                 participation_fraction: float = 1.0,
+                 participation_policy: str = "uniform",
+                 staleness_decay: float = 0.0) -> None:
     import numpy as np
 
     from repro.common.types import FedConfig
@@ -30,7 +33,10 @@ def check_parity(num_clients: int, devices: int, method: str = "edgefd",
                                ("mesh", "cohort", devices)):
         cfg = FedConfig(num_clients=num_clients, rounds=2, method=method,
                         scenario=scenario, proxy_batch=120, batch_size=32,
-                        lr=1e-2, seed=0, engine=engine, num_devices=ndev)
+                        lr=1e-2, seed=0, engine=engine, num_devices=ndev,
+                        participation_fraction=participation_fraction,
+                        participation_policy=participation_policy,
+                        staleness_decay=staleness_decay)
         results[name] = simulator.run(cfg, "mnist_feat",
                                       n_train=800, n_test=300)
     base = results["loop"]
@@ -44,6 +50,9 @@ def check_parity(num_clients: int, devices: int, method: str = "edgefd",
             np.testing.assert_allclose(rl.distill_loss, rc.distill_loss,
                                        **TOL)
             np.testing.assert_allclose(rl.id_fraction, rc.id_fraction, **TOL)
+            np.testing.assert_allclose(rl.mean_staleness, rc.mean_staleness,
+                                       **TOL)
+            assert rl.participants == rc.participants
             assert rl.bytes_up == rc.bytes_up
             assert rl.bytes_down == rc.bytes_down
 
@@ -55,6 +64,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=4)
     ap.add_argument("--clients", type=int, nargs="+", default=[4, 5])
+    ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--policy", default="uniform")
+    ap.add_argument("--staleness-decay", type=float, default=0.0)
     args = ap.parse_args(argv)
 
     # must happen before the first jax import (device count is init-time)
@@ -67,8 +79,12 @@ def main(argv=None) -> None:
         f"forced {args.devices} host devices but jax sees "
         f"{jax.device_count()} — XLA_FLAGS arrived after jax init?")
     for c in args.clients:
-        check_parity(c, args.devices)
-        print(f"PARITY-OK clients={c} devices={args.devices}")
+        check_parity(c, args.devices,
+                     participation_fraction=args.participation,
+                     participation_policy=args.policy,
+                     staleness_decay=args.staleness_decay)
+        print(f"PARITY-OK clients={c} devices={args.devices} "
+              f"participation={args.participation}")
 
 
 if __name__ == "__main__":

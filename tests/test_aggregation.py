@@ -34,7 +34,7 @@ def test_psum_equals_gather_form(c, t, k, seed):
     logits = jax.random.normal(key, (c, t, k))
     mask = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.6, (c, t))
     ref_teacher, ref_valid = masked_mean_logits(logits, mask)
-    psum_fn = jax.vmap(lambda l, m: masked_mean_logits_psum(l, m, "clients"),
+    psum_fn = jax.vmap(lambda lg, m: masked_mean_logits_psum(lg, m, "clients"),
                        axis_name="clients")
     teacher, valid = psum_fn(logits, mask)
     # every rank receives the same teacher == the hub result

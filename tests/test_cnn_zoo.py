@@ -34,8 +34,8 @@ def test_architectures_are_heterogeneous():
     for idx in range(10):
         spec, hw, ch = get_client_model(idx, "mnist")
         params = spec.init(jax.random.PRNGKey(0), hw, ch)
-        counts.append(sum(int(np.prod(l.shape))
-                          for p in params for l in jax.tree.leaves(p)))
+        counts.append(sum(int(np.prod(leaf.shape))
+                          for p in params for leaf in jax.tree.leaves(p)))
     assert len(set(counts)) >= 6, counts
 
 

@@ -110,9 +110,11 @@ def test_mesh_sharded_parity_forced_devices():
     env = dict(os.environ)
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     env.setdefault("JAX_PLATFORMS", "cpu")
+    # < CI's per-test --timeout=600 (pytest-timeout), so a wedged child is
+    # reported by this assert instead of a blunt test kill
     res = subprocess.run(
         [sys.executable, prog, "--devices", "4", "--clients", "4", "5"],
-        env=env, capture_output=True, text=True, timeout=900)
+        env=env, capture_output=True, text=True, timeout=480)
     assert res.returncode == 0, (
         f"mesh parity subprocess failed:\n{res.stdout}\n{res.stderr}")
     assert res.stdout.count("PARITY-OK") == 2, res.stdout

@@ -4,10 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.kmeans_dist import ops as kd_ops, ref as kd_ref
-from repro.kernels.kulsif_rbf import ops as rbf_ops, ref as rbf_ref
 from repro.kernels.distill_kl import ops as kl_ops, ref as kl_ref
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.kmeans_dist import ops as kd_ops, ref as kd_ref
+from repro.kernels.kulsif_rbf import ops as rbf_ops, ref as rbf_ref
 
 
 @pytest.mark.parametrize("t,d,c", [(64, 8, 1), (300, 50, 7), (1000, 784, 10),

@@ -71,4 +71,5 @@ def test_slstm_custom_vjp_long_sequence_stable():
     out = S.slstm_forward(p, x, N)
     assert bool(jnp.all(jnp.isfinite(out)))
     g = jax.grad(lambda q: jnp.sum(S.slstm_forward(q, x, N) ** 2))(p)
-    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(g))
+    assert all(bool(jnp.all(jnp.isfinite(leaf)))
+               for leaf in jax.tree.leaves(g))

@@ -68,7 +68,7 @@ def test_selective_fd_baseline_runs():
 
 def test_comm_accounting_monotone(strong_results):
     logs = strong_results["edgefd"].rounds
-    ups = [l.bytes_up for l in logs]
+    ups = [log.bytes_up for log in logs]
     assert all(b > a for a, b in zip(ups, ups[1:]))
     # filtered upload must be smaller than unfiltered (same rounds/batch)
     assert strong_results["edgefd"].rounds[-1].bytes_up < \
