@@ -1,23 +1,48 @@
-"""Pallas-kernel microbenchmarks (interpret mode on CPU: correctness-scale
-numbers; the BlockSpec tiling is the TPU deployment artifact).
+"""Pallas-kernel benchmarks: microbenchmarks + wired hot-path measurements.
 
-Compares each kernel wrapper against its jnp oracle at FD-realistic sizes.
+Two sections, both per backend where it matters:
+
+* ``micro`` — each kernel wrapper against its pure-jnp oracle at
+  FD-realistic sizes (the historical microbenchmarks).
+* ``wired`` — the *real* call sites the dispatch layer routes
+  (``repro.kernels.dispatch``): a full ``kmeans_fit`` (fused Lloyd step
+  vs the reference two-matmul body), one distillation step — forward AND
+  backward through ``kd_kl_loss`` (the Pallas path differentiates through
+  the custom-VJP backward kernel) — and a ``KuLSIFDRE.learn`` gram-matrix
+  solve, each timed on both ``kernel_backend`` values.
+
+On CPU the Pallas backend runs in interpret mode: correctness-scale
+numbers only (expect jnp to win — interpret emits the kernel body as
+unfused jnp ops). The BlockSpec tiling is the TPU deployment artifact;
+on a TPU host the same script times the Mosaic-lowered kernels.
+
+Results land at the repo root as ``BENCH_kernels.json`` (the BENCH_*
+convention every other sweep uses); ``--out`` overrides.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, save_json, timeit
+from benchmarks.common import emit, timeit
+from repro.core.distill import kd_kl_loss
+from repro.core.dre import KuLSIFDRE
+from repro.core.kmeans import kmeans_fit
 from repro.kernels.distill_kl import ops as kl_ops, ref as kl_ref
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.kmeans_dist import ops as kd_ops, ref as kd_ref
 from repro.kernels.kulsif_rbf import ops as rbf_ops, ref as rbf_ref
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+BACKENDS = ("jnp", "pallas")
 
-def run(quick=False):
+
+def run_micro(quick=False):
     key = jax.random.PRNGKey(0)
     out = {}
 
@@ -29,6 +54,12 @@ def run(quick=False):
     t_r = timeit(lambda: jit_ref(x, cent))
     out["kmeans_dist"] = {"pallas_s": t_k, "ref_s": t_r, "t": t, "d": d, "c": c}
     emit("kernel/kmeans_dist", t_k * 1e6, f"ref={t_r*1e6:.1f}us")
+
+    jit_lref = jax.jit(kd_ref.lloyd_step)
+    t_k = timeit(lambda: kd_ops.lloyd_step(x, cent))
+    t_r = timeit(lambda: jit_lref(x, cent))
+    out["lloyd_step"] = {"pallas_s": t_k, "ref_s": t_r, "t": t, "d": d, "c": c}
+    emit("kernel/lloyd_step", t_k * 1e6, f"ref={t_r*1e6:.1f}us")
 
     n, m = (512, 512) if quick else (2048, 1024)
     a = jax.random.normal(key, (n, d))
@@ -62,11 +93,83 @@ def run(quick=False):
     return out
 
 
+def run_wired(quick=False, backends=BACKENDS):
+    """Time the dispatch layer's real call sites, per kernel_backend."""
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    # full kmeans_fit: the fused Lloyd step (pallas) vs the reference body
+    # that materialises the (n, k) one-hot and pays a second matmul (jnp)
+    n, d, k, iters = (1024, 50, 10, 25) if quick else (8192, 50, 10, 50)
+    x = jax.random.normal(key, (n, d)) * 2
+    row = {"n": n, "d": d, "k": k, "max_iter": iters}
+    for b in backends:
+        row[f"{b}_s"] = timeit(
+            lambda b=b: kmeans_fit(key, x, k, iters, backend=b), iters=3)
+    out["kmeans_fit"] = row
+    emit("wired/kmeans_fit", row["pallas_s"] * 1e6,
+         f"jnp={row['jnp_s']*1e6:.1f}us")
+
+    # one distill step: forward + backward through kd_kl_loss (the pallas
+    # path exercises the custom-VJP backward kernel)
+    nn, kc = (2048, 10) if quick else (16384, 10)
+    s = jax.random.normal(key, (nn, kc)) * 3
+    tt = jax.random.normal(jax.random.fold_in(key, 3), (nn, kc)) * 3
+    w = jnp.ones((nn,), jnp.float32)
+    row = {"n": nn, "k": kc}
+    for b in backends:
+        step = jax.jit(jax.value_and_grad(
+            lambda ss, b=b: kd_kl_loss(ss, tt, 3.0, w, backend=b)))
+        row[f"{b}_s"] = timeit(lambda step=step: step(s))
+    out["distill_step_fwd_bwd"] = row
+    emit("wired/distill_step", row["pallas_s"] * 1e6,
+         f"jnp={row['jnp_s']*1e6:.1f}us")
+
+    # KuLSIF learn: gram construction + m×m solve (Table IV baseline cost)
+    np_, aux = (512, 128) if quick else (2048, 256)
+    priv = jax.random.normal(key, (np_, d))
+    row = {"n_private": np_, "num_aux": aux}
+    for b in backends:
+        dre = KuLSIFDRE(sigma=3.0, num_aux=aux, kernel_backend=b)
+        row[f"{b}_s"] = timeit(
+            lambda dre=dre: dre.learn(jax.random.PRNGKey(1), priv).alpha,
+            iters=3)
+    out["kulsif_learn"] = row
+    emit("wired/kulsif_learn", row["pallas_s"] * 1e6,
+         f"jnp={row['jnp_s']*1e6:.1f}us")
+    return out
+
+
+def run(quick=False):
+    """Micro + wired sections (the registry entry benchmarks/run.py uses)."""
+    return {
+        "benchmark": "kernels",
+        "platform": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "note": "off-TPU the pallas backend runs in interpret mode "
+                "(kernel body emitted as unfused jnp ops): numbers "
+                "validate the wiring, the tiling is the TPU artifact",
+        "micro": run_micro(quick=quick),
+        "wired": run_wired(quick=quick),
+    }
+
+
+def run_and_save(quick=False, out_path: str = DEFAULT_OUT):
+    results = run(quick=quick)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"saved {out_path}")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="output JSON path (default: repo-root "
+                         "BENCH_kernels.json, like the other BENCH_* files)")
     args = ap.parse_args(argv)
-    save_json("kernel_bench.json", run(quick=args.quick))
+    run_and_save(quick=args.quick, out_path=args.out)
 
 
 if __name__ == "__main__":

@@ -25,7 +25,9 @@ def main(argv=None) -> None:
                             table3_accuracy, table4_complexity)
 
     jobs = [
-        ("kernels", lambda: kernel_bench.run(quick=quick)),
+        # kernels records to the repo-root BENCH_kernels.json (micro +
+        # wired-path sections, both kernel backends)
+        ("kernels", lambda: kernel_bench.run_and_save(quick=quick)),
         ("fig2", lambda: fig2_dre_cost.run(
             sizes=(256, 512, 1024) if quick else (256, 512, 1024, 2048, 4096))),
         ("table4", lambda: table4_complexity.run(quick=quick)),

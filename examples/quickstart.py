@@ -35,6 +35,14 @@ cfg = FedConfig(
     participation_fraction=1.0,
     participation_policy="uniform",
     staleness_decay=0.0,
+    # Hot-path kernels (repro.kernels.dispatch): "auto" runs the Pallas
+    # TPU kernels (fused Lloyd fit, fused KD-KL fwd+bwd, tiled KuLSIF
+    # gram) on TPU and the jnp reference elsewhere — on CPU this is
+    # bit-for-bit the historical behavior. "pallas" forces the kernels
+    # (interpret mode off-TPU: validates the kernel path, not a CPU
+    # speedup); "jnp" forces the reference. The CLI spells it
+    #   python -m repro.launch.fed_train --kernel-backend pallas
+    kernel_backend="auto",
 )
 
 result = simulator.run(cfg, dataset_name="mnist_feat",

@@ -165,3 +165,10 @@ class FedConfig:
     # rounds since the client last reported). 0.0 drops non-participants
     # silently; 1.0 reuses stale knowledge at full weight (FedBuff-style).
     staleness_decay: float = 0.0
+    # kernel backend for the round hot paths (repro.kernels.dispatch):
+    # "auto" = Pallas kernels on TPU, jnp reference elsewhere (also honors
+    # the REPRO_KERNEL_BACKEND env var / kernel_backend() context manager);
+    # "pallas" forces the kernels (interpret mode off-TPU — a test/CI
+    # vehicle, not a fast path); "jnp" forces the reference code, which on
+    # CPU is bit-for-bit the pre-dispatch behavior.
+    kernel_backend: str = "auto"

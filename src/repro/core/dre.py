@@ -26,7 +26,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.kmeans import kmeans_fit, min_dist_to_centroids, pairwise_sq_dists
+from repro.core.kmeans import kmeans_fit, min_dist_to_centroids
+from repro.kernels import dispatch
 
 
 # ---------------------------------------------------------------------------
@@ -41,6 +42,9 @@ class KMeansDRE:
     threshold: Optional[float] = None   # None => calibrate at learn()
     calibration_q: float = 0.95         # quantile of private distances
     max_iter: int = 50
+    # kernel dispatch for the Lloyd fit (repro.kernels.dispatch);
+    # None/"auto" = ambient policy (Pallas on TPU, jnp elsewhere)
+    kernel_backend: Optional[str] = None
 
     centroids: Optional[jax.Array] = None
 
@@ -48,13 +52,16 @@ class KMeansDRE:
         """Fit centroids; if threshold is None, set T^ID to the
         ``calibration_q`` quantile of the *private* data's own distances —
         the principled realisation of the paper's 'client-specific
-        predefined thresholds' (§IV-B)."""
+        predefined thresholds' (§IV-B). The calibrated threshold stays a
+        device scalar (no host sync — per-client learning can be queued
+        without blocking; comparisons and float() work on it as before)."""
         flat = x.reshape(x.shape[0], -1)
-        res = kmeans_fit(key, flat, self.num_centroids, self.max_iter)
+        res = kmeans_fit(key, flat, self.num_centroids, self.max_iter,
+                         backend=self.kernel_backend)
         thr = self.threshold
         if thr is None:
             d = min_dist_to_centroids(flat, res.centroids)
-            thr = float(jnp.quantile(d, self.calibration_q))
+            thr = jnp.quantile(d, self.calibration_q)
         return dataclasses.replace(self, centroids=res.centroids, threshold=thr)
 
     def distances(self, t):
@@ -75,17 +82,21 @@ class KMeansDRE:
 # ---------------------------------------------------------------------------
 
 def rbf_kernel(a, b, sigma: float):
-    """K(a,b) = exp(−‖a−b‖²/(2σ²)); a:(n,d) b:(m,d) -> (n,m)."""
-    d2 = pairwise_sq_dists(a, b)
-    return jnp.exp(-d2 / (2.0 * sigma * sigma))
+    """K(a,b) = exp(−‖a−b‖²/(2σ²)); a:(n,d) b:(m,d) -> (n,m).
+
+    The canonical jnp reference — delegates to the dispatch layer's jnp
+    path (same ops as always; the Pallas-tiled variant is
+    ``dispatch.rbf_matrix(..., backend="pallas")``).
+    """
+    return dispatch.rbf_matrix(a, b, sigma, backend="jnp")
 
 
-@partial(jax.jit, static_argnames=())
-def _kulsif_learn(aux, private, sigma, lam):
+@partial(jax.jit, static_argnames=("backend",))
+def _kulsif_learn(aux, private, sigma, lam, backend="jnp"):
     m = aux.shape[0]
     n = private.shape[0]
-    k11 = rbf_kernel(aux, aux, sigma)                  # O(m² d) — Table IV
-    k12 = rbf_kernel(aux, private, sigma)              # O(n m d)
+    k11 = dispatch.rbf_matrix(aux, aux, sigma, backend=backend)      # O(m² d)
+    k12 = dispatch.rbf_matrix(aux, private, sigma, backend=backend)  # O(n m d)
     a = k11 / m + lam * jnp.eye(m, dtype=k11.dtype)
     b = -jnp.sum(k12, axis=1) / (lam * n * m)
     alpha = jnp.linalg.solve(a, b)                     # O(m³)
@@ -105,6 +116,9 @@ class KuLSIFDRE:
     lam: float = 0.1
     num_aux: int = 256
     threshold: float = 1.0     # on the estimated ratio
+    # kernel dispatch for the gram matrices (repro.kernels.dispatch);
+    # None/"auto" = ambient policy (Pallas on TPU, jnp elsewhere)
+    kernel_backend: Optional[str] = None
 
     alpha: Optional[jax.Array] = None
     aux: Optional[jax.Array] = None
@@ -116,15 +130,20 @@ class KuLSIFDRE:
         hi = jnp.max(x, axis=0)
         aux = jax.random.uniform(key, (self.num_aux, x.shape[1]),
                                  minval=lo, maxval=hi)
-        alpha = _kulsif_learn(aux, x, jnp.float32(self.sigma), jnp.float32(self.lam))
+        alpha = _kulsif_learn(aux, x, jnp.float32(self.sigma),
+                              jnp.float32(self.lam),
+                              backend=dispatch.resolve(self.kernel_backend))
         return dataclasses.replace(self, alpha=alpha, aux=aux, private=x)
 
     def estimate(self, t):
         """r̂(t) — density ratio p_private/p_aux (higher = more ID)."""
         assert self.alpha is not None, "call learn() first"
         t = t.reshape(t.shape[0], -1).astype(jnp.float32)
-        k_ta = rbf_kernel(t, self.aux, self.sigma)         # O(t·m·d)
-        k_tp = rbf_kernel(t, self.private, self.sigma)     # O(t·n·d)
+        backend = self.kernel_backend
+        k_ta = dispatch.rbf_matrix(t, self.aux, self.sigma,
+                                   backend=backend)        # O(t·m·d)
+        k_tp = dispatch.rbf_matrix(t, self.private, self.sigma,
+                                   backend=backend)        # O(t·n·d)
         n = self.private.shape[0]
         return k_ta @ self.alpha + jnp.sum(k_tp, axis=1) / (self.lam * n)
 

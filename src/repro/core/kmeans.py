@@ -4,16 +4,24 @@ The paper's KMeans-DRE learns centroid positions from a client's private
 data (Algorithm 1 line 3). Time O(k·n·c·d), space O(c·d + n) — Table IV.
 
 The assignment step is the compute hot-spot; ``repro.kernels.kmeans_dist``
-provides the Pallas TPU kernel for it (matmul-form distances, fused argmin).
-This module is the framework-level API and the jnp reference path.
+provides the Pallas TPU kernel for it (matmul-form distances, fused argmin
++ per-centroid accumulation). ``kmeans_fit``/``kmeans_fit_batched`` route
+through the kernel when the resolved ``kernel_backend`` is ``"pallas"``
+(``repro.kernels.dispatch``); the default jnp path below is kept inline
+and op-for-op unchanged — the default-backend bit-for-bit guarantee rides
+on it.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import dispatch
+# canonical impl moved to the dispatch layer; re-exported for importers
+from repro.kernels.dispatch import pairwise_sq_dists as pairwise_sq_dists
 
 
 class KMeansResult(NamedTuple):
@@ -21,14 +29,6 @@ class KMeansResult(NamedTuple):
     assignments: jax.Array   # (n,) int32
     inertia: jax.Array       # scalar — sum of squared distances
     n_iter: jax.Array        # iterations executed
-
-
-def pairwise_sq_dists(x, c):
-    """‖x−c‖² via the matmul form (MXU-friendly): x:(n,d), c:(k,d) -> (n,k)."""
-    x2 = jnp.sum(jnp.square(x), axis=-1, keepdims=True)        # (n,1)
-    c2 = jnp.sum(jnp.square(c), axis=-1)                       # (k,)
-    cross = x @ c.T                                            # (n,k)
-    return jnp.maximum(x2 - 2.0 * cross + c2[None, :], 0.0)
 
 
 def kmeans_plus_plus(key, x, k: int):
@@ -56,9 +56,10 @@ def kmeans_plus_plus(key, x, k: int):
 
 
 @partial(jax.jit, static_argnames=("k", "max_iter"))
-def kmeans_fit(key, x, k: int, max_iter: int = 50, tol: float = 1e-6):
-    """Lloyd's algorithm. x: (n, d) -> KMeansResult. Runs a fixed-shape scan
-    with a convergence flag (jit-stable; converged iterations are no-ops)."""
+def _kmeans_fit_jnp(key, x, k: int, max_iter: int, tol):
+    """Reference Lloyd's algorithm — the historical ``kmeans_fit`` body,
+    unchanged (two matmuls per step: distances, then the (n, k) one-hot
+    scatter ``one_hot.T @ x``)."""
     x = x.astype(jnp.float32)
     n, d = x.shape
     init = kmeans_plus_plus(key, x, k)
@@ -87,16 +88,77 @@ def kmeans_fit(key, x, k: int, max_iter: int = 50, tol: float = 1e-6):
 
 
 @partial(jax.jit, static_argnames=("k", "max_iter"))
-def kmeans_fit_batched(keys, xs, k: int, max_iter: int = 50, tol: float = 1e-6):
+def _kmeans_fit_batched_jnp(keys, xs, k: int, max_iter: int, tol):
+    return jax.vmap(
+        lambda kk, xx: _kmeans_fit_jnp(kk, xx, k, max_iter, tol))(keys, xs)
+
+
+@partial(jax.jit, static_argnames=("k", "max_iter"))
+def _kmeans_fit_pallas(keys, xs, k: int, max_iter: int, tol):
+    """Fused-Lloyd fit over a stacked client axis: keys (C, …), xs (C, n, d).
+
+    Each scan step is one ``lloyd_step`` kernel call — the client axis is a
+    grid dimension, so the cohort engines' vmapped DRE fit compiles once
+    for any C instead of retracing per client, and the (n, k) one-hot /
+    second matmul of the reference body never materialise.
+    """
+    from repro.kernels.kmeans_dist import ops as kd_ops
+
+    xs = xs.astype(jnp.float32)
+    c = xs.shape[0]
+    init = jax.vmap(lambda kk, xx: kmeans_plus_plus(kk, xx, k))(keys, xs)
+
+    def step(carry, _):
+        cents, done, iters = carry
+        _, _, sums, counts = kd_ops.lloyd_step(xs, cents)
+        new = jnp.where(counts[..., None] > 0,
+                        sums / jnp.maximum(counts[..., None], 1.0), cents)
+        shift = jnp.sum(jnp.square(new - cents), axis=(-2, -1))
+        new_done = done | (shift < tol)
+        cents = jnp.where(done[..., None, None], cents, new)
+        iters = iters + jnp.where(done, 0, 1)
+        return (cents, new_done, iters), None
+
+    (cents, _, iters), _ = jax.lax.scan(
+        step, (init, jnp.zeros((c,), bool), jnp.zeros((c,), jnp.int32)),
+        None, length=max_iter)
+    assign, min_d2, _, _ = kd_ops.lloyd_step(xs, cents)
+    inertia = jnp.sum(min_d2, axis=-1)
+    return KMeansResult(cents, assign, inertia, iters)
+
+
+def kmeans_fit(key, x, k: int, max_iter: int = 50, tol: float = 1e-6, *,
+               backend: Optional[str] = None):
+    """Lloyd's algorithm. x: (n, d) -> KMeansResult. Runs a fixed-shape scan
+    with a convergence flag (jit-stable; converged iterations are no-ops).
+
+    ``backend`` selects the assignment-step implementation via
+    ``repro.kernels.dispatch`` (None/"auto" = ambient policy): "pallas"
+    fuses distances + argmin + per-centroid accumulation in one kernel,
+    "jnp" is the reference two-matmul body.
+    """
+    if dispatch.resolve(backend) == "pallas":
+        res = _kmeans_fit_pallas(jnp.asarray(key)[None],
+                                 jnp.asarray(x)[None], k, max_iter, tol)
+        return KMeansResult(*(leaf[0] for leaf in res))
+    return _kmeans_fit_jnp(key, x, k, max_iter, tol)
+
+
+def kmeans_fit_batched(keys, xs, k: int, max_iter: int = 50, tol: float = 1e-6,
+                       *, backend: Optional[str] = None):
     """Fit one KMeans per leading-axis slice in a single compiled call.
 
     keys: (C, 2) PRNG keys; xs: (C, n, d) stacked per-client data (same n and
     k for every slice — the cohort engine's homogeneity rule). Returns a
     ``KMeansResult`` whose fields carry a leading client axis. Equivalent to
     looping ``kmeans_fit`` per slice (same keys ⇒ same seeding draws), which
-    ``tests/test_dre_contract.py`` checks.
+    ``tests/test_dre_contract.py`` checks. On the "pallas" backend the
+    client axis is a kernel grid dimension (one trace for any C).
     """
-    return jax.vmap(lambda kk, xx: kmeans_fit(kk, xx, k, max_iter, tol))(keys, xs)
+    if dispatch.resolve(backend) == "pallas":
+        return _kmeans_fit_pallas(jnp.asarray(keys), jnp.asarray(xs),
+                                  k, max_iter, tol)
+    return _kmeans_fit_batched_jnp(keys, xs, k, max_iter, tol)
 
 
 def min_dist_to_centroids(x, centroids):

@@ -33,12 +33,13 @@ class Method:
 
     def make_dre(self, *, num_centroids: int, threshold: Optional[float],
                  kulsif_threshold: float = 0.05, num_aux: int = 256,
-                 sigma: float = 4.0):
+                 sigma: float = 4.0, kernel_backend: Optional[str] = None):
         if self.client_filter == "kmeans":
-            return KMeansDRE(num_centroids=num_centroids, threshold=threshold)
+            return KMeansDRE(num_centroids=num_centroids, threshold=threshold,
+                             kernel_backend=kernel_backend)
         if self.client_filter == "kulsif":
             return KuLSIFDRE(threshold=kulsif_threshold, num_aux=num_aux,
-                             sigma=sigma)
+                             sigma=sigma, kernel_backend=kernel_backend)
         return None
 
 

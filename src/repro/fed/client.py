@@ -25,7 +25,8 @@ class Client:
     def __init__(self, cid: int, apply_fn: Callable, params, opt: Optimizer,
                  x: np.ndarray, y: np.ndarray, dre=None, *,
                  num_classes: int = 10, temperature: float = 3.0,
-                 distill_loss: str = "kl", seed: int = 0, arch_key=None):
+                 distill_loss: str = "kl", seed: int = 0, arch_key=None,
+                 kernel_backend: Optional[str] = None):
         self.cid = cid
         self.apply_fn = apply_fn
         self.params = params
@@ -37,6 +38,9 @@ class Client:
         self.num_classes = num_classes
         self.temperature = temperature
         self.distill_loss = distill_loss
+        # kernel dispatch for the distill loss (repro.kernels.dispatch);
+        # None/"auto" = ambient policy, resolved when the step first traces
+        self.kernel_backend = kernel_backend
         # clients sharing an arch_key have identical (init, apply) structure
         # and may be stacked into one cohort (fed/cohort.py); None = unique
         self.arch_key = arch_key
@@ -45,6 +49,7 @@ class Client:
         self.bytes_down = 0
 
         loss_kind = distill_loss
+        backend = kernel_backend
 
         @jax.jit
         def _train_step(params, opt_state, xb, yb):
@@ -61,7 +66,8 @@ class Client:
                 logits = self.apply_fn(p, xb, True)
                 if loss_kind == "mse":
                     return D.kd_mse_loss(logits, teacher, w)
-                return D.kd_kl_loss(logits, teacher, self.temperature, w)
+                return D.kd_kl_loss(logits, teacher, self.temperature, w,
+                                    backend=backend)
             loss, grads = jax.value_and_grad(loss_fn)(params)
             upd, opt_state = self.opt.update(grads, opt_state, params)
             return apply_updates(params, upd), opt_state, loss

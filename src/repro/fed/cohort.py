@@ -66,12 +66,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distill as D
-from repro.core.dre import KMeansDRE, KuLSIFDRE, rbf_kernel
+from repro.core.dre import KMeansDRE, KuLSIFDRE
 from repro.core.kmeans import kmeans_fit_batched, min_dist_to_centroids
 from repro.fed.batching import padded_epoch_plan, steps_per_epoch
 from repro.fed.client import Client
 from repro.fed.mesh import (DEFAULT_CLIENT_AXIS, padded_size, replicate,
                             shard_clients)
+from repro.kernels import dispatch
 from repro.models.sharding import constrain, logical_rules
 from repro.optim.optimizers import apply_updates
 
@@ -128,11 +129,24 @@ class _Cohort:
                         f"cohort members {c0.cid} and {c.cid} share arch_key "
                         f"{c0.arch_key!r} but differ in {attr}: "
                         f"{getattr(c0, attr)!r} vs {getattr(c, attr)!r}")
+            # compare *resolved* backends: None and "auto" (and "pallas" vs
+            # "auto" on TPU) select the same kernels and must not split a
+            # cohort
+            if (dispatch.resolve(c.kernel_backend)
+                    != dispatch.resolve(c0.kernel_backend)):
+                raise ValueError(
+                    f"cohort members {c0.cid} and {c.cid} share arch_key "
+                    f"{c0.arch_key!r} but resolve to different kernel "
+                    f"backends: {c0.kernel_backend!r} vs "
+                    f"{c.kernel_backend!r}")
         self.apply_fn = c0.apply_fn
         self.opt = c0.opt
         self.temperature = c0.temperature
         self.loss_kind = c0.distill_loss
         self.num_classes = c0.num_classes
+        # resolved once at construction and baked into the jitted phases —
+        # flipping the ambient backend later never retraces a phase
+        self.kernel_backend = dispatch.resolve(c0.kernel_backend)
 
         self.n = np.array([len(c.y) for c in members], np.int64)
         n_max = int(self.n.max())
@@ -204,6 +218,7 @@ class _Cohort:
     def _build_fns(self):
         apply_fn, opt = self.apply_fn, self.opt
         temp, loss_kind, k_cls = self.temperature, self.loss_kind, self.num_classes
+        backend = self.kernel_backend
 
         def pinned(fn):
             """jit(fn) with every output pinned to the client axis (no-op
@@ -245,7 +260,7 @@ class _Cohort:
         def kd_loss(logits, teacher, wb):
             if loss_kind == "mse":
                 return D.kd_mse_loss(logits, teacher, wb)
-            return D.kd_kl_loss(logits, teacher, temp, wb)
+            return D.kd_kl_loss(logits, teacher, temp, wb, backend=backend)
 
         def distill_chunk(params, opt_state, px, teacher, idx, w, valid):
             """Shared proxy batch; per-client weights fold in teacher validity."""
@@ -304,8 +319,10 @@ class _Cohort:
 
         def kulsif_mask_chunk(alpha, aux, priv, n, thr, cid, sigma, lam,
                               pxf, owner):
-            k_ta = rbf_kernel(pxf, aux, sigma)
-            k_tp = rbf_kernel(pxf, priv, sigma)
+            # dispatched like KuLSIFDRE.estimate — under vmap the Pallas
+            # path batches through the kernel's grid (one trace per cohort)
+            k_ta = dispatch.rbf_matrix(pxf, aux, sigma, backend=backend)
+            k_tp = dispatch.rbf_matrix(pxf, priv, sigma, backend=backend)
             r = k_ta @ alpha + jnp.sum(k_tp, axis=1) / (lam * n)
             return (owner == cid) | (r >= thr)
 
@@ -316,15 +333,20 @@ class _Cohort:
     # -------------------------------------------------------------- DRE learn
     @staticmethod
     def _check_kulsif_uniform(dres) -> None:
-        # sigma/lam are baked into the vmapped ratio evaluation once,
-        # so they must agree across members (thresholds are per-client)
+        # sigma/lam/kernel_backend are baked into the vmapped ratio
+        # evaluation once, so they must agree across members (thresholds
+        # are per-client); backends compare *resolved* — None and "auto"
+        # select the same kernels
         for d in dres[1:]:
-            if (d.sigma, d.lam) != (dres[0].sigma, dres[0].lam):
+            if ((d.sigma, d.lam, dispatch.resolve(d.kernel_backend))
+                    != (dres[0].sigma, dres[0].lam,
+                        dispatch.resolve(dres[0].kernel_backend))):
                 raise ValueError(
-                    f"cohort KuLSIF DREs disagree on (sigma, lam): "
-                    f"{(dres[0].sigma, dres[0].lam)} vs "
-                    f"{(d.sigma, d.lam)}; give such clients distinct "
-                    "arch_keys")
+                    f"cohort KuLSIF DREs disagree on (sigma, lam, "
+                    f"kernel_backend): "
+                    f"{(dres[0].sigma, dres[0].lam, dres[0].kernel_backend)}"
+                    f" vs {(d.sigma, d.lam, d.kernel_backend)}; give such "
+                    "clients distinct arch_keys")
 
     def learn_dres(self, key) -> None:
         if all(c.dre is None for c in self.members):
@@ -334,13 +356,22 @@ class _Cohort:
 
         if all(isinstance(d, KMeansDRE) for d in dres):
             ks = {d.num_centroids for d in dres}
-            # the vmapped fit bakes ONE (threshold, calibration_q, max_iter)
-            # into the whole batch, so every fit hyperparameter must agree —
-            # anything less silently mis-calibrates the odd member out
+            # the vmapped fit bakes ONE (threshold, calibration_q, max_iter,
+            # kernel_backend) into the whole batch, so every fit
+            # hyperparameter must agree — anything less silently
+            # mis-calibrates the odd member out
+            # thresholds may be device scalars after a previous learn()
+            # (unhashable) — compare by value; backends compare *resolved*
+            # (None and "auto" mean the same thing and must not drop the
+            # cohort to the slow per-client fit loop)
+            thrs_cfg = {None if d.threshold is None else float(d.threshold)
+                        for d in dres}
+            fit_backends = {dispatch.resolve(d.kernel_backend) for d in dres}
             uniform = (len(set(self.n)) == 1 and len(ks) == 1
-                       and len({d.threshold for d in dres}) == 1
+                       and len(thrs_cfg) == 1
                        and len({d.calibration_q for d in dres}) == 1
-                       and len({d.max_iter for d in dres}) == 1)
+                       and len({d.max_iter for d in dres}) == 1
+                       and len(fit_backends) == 1)
             if uniform:
                 # the vmapped learn path: every filter fit in one call,
                 # device-parallel over the (padded) client axis; dummy rows
@@ -350,7 +381,8 @@ class _Cohort:
                 with self._ctx():
                     res = kmeans_fit_batched(
                         self._put_c(self._pad_rows(jnp.stack(keys))),
-                        feats, k, dres[0].max_iter)
+                        feats, k, dres[0].max_iter,
+                        backend=fit_backends.pop())
                     if dres[0].threshold is None:
                         dmin = jax.vmap(min_dist_to_centroids)(feats,
                                                                res.centroids)
@@ -358,14 +390,16 @@ class _Cohort:
                                             axis=1)
                     else:
                         thrs = jnp.full((self.c_pad,), dres[0].threshold)
-                # pull centroids to host: rows of a mesh-sharded fit live on
-                # different devices, and jnp.stack in the packing step
-                # rejects mixed committed devices
+                # pull centroids/thresholds to host in one gather each:
+                # rows of a mesh-sharded fit live on different devices, and
+                # jnp.stack in the packing step rejects mixed committed
+                # devices (one np.asarray, not C per-scalar float() syncs)
                 cents_host = np.asarray(res.centroids)
+                thrs_host = np.asarray(thrs)
                 for i, c in enumerate(self.members):
                     c.dre = dataclasses.replace(
                         c.dre, centroids=jnp.asarray(cents_host[i]),
-                        threshold=float(thrs[i]))
+                        threshold=jnp.float32(thrs_host[i]))
             else:
                 for c, kk in zip(self.members, keys):
                     c.learn_dre(kk)

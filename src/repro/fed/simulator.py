@@ -22,6 +22,7 @@ from repro.data.synthetic import make_dataset
 from repro.fed import participation
 from repro.fed.client import Client
 from repro.fed.server import Server
+from repro.kernels import dispatch
 from repro.models.cnn import MLPClassifier, get_client_model
 from repro.optim.optimizers import sgd
 
@@ -77,13 +78,15 @@ def build_experiment(cfg: FedConfig, dataset_name: str = "mnist_feat",
         dre = method.make_dre(
             num_centroids=_centroids_for(cfg.scenario, len(cd.labels),
                                          ds.num_classes),
-            threshold=cfg.id_threshold)
+            threshold=cfg.id_threshold,
+            kernel_backend=cfg.kernel_backend)
         clients.append(Client(cid, apply_fn, params, shared_opt,
                               cd.x, cd.y, dre,
                               num_classes=ds.num_classes,
                               temperature=cfg.temperature,
                               distill_loss=method.distill_loss,
-                              seed=cfg.seed, arch_key=arch_key))
+                              seed=cfg.seed, arch_key=arch_key,
+                              kernel_backend=cfg.kernel_backend))
     return clients, server, np.asarray(ds.x_test), np.asarray(ds.y_test)
 
 
@@ -100,8 +103,10 @@ def build_engine(clients: List[Client], cfg: FedConfig):
 def run(cfg: FedConfig, dataset_name: str = "mnist_feat", *,
         n_train: int = 5000, n_test: int = 1000, progress=None
         ) -> ExperimentResult:
-    # fail fast on a bad participation config, before any client is built
+    # fail fast on a bad participation/backend config, before any client
+    # is built
     participation.validate_config(cfg)
+    dispatch.resolve(cfg.kernel_backend)
     clients, server, x_test, y_test = build_experiment(
         cfg, dataset_name, n_train=n_train, n_test=n_test)
     engine = build_engine(clients, cfg)

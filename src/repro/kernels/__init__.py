@@ -3,5 +3,12 @@
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 public wrapper), ref.py (pure-jnp oracle). Validated with interpret=True
 on CPU; lowered by Mosaic on TPU.
+
+``repro.kernels.dispatch`` is the backend switch that routes the
+framework's hot paths (KMeans-DRE Lloyd fit, KD-KL loss, KuLSIF gram
+matrices) to these kernels or to the jnp reference code
+(``kernel_backend ∈ {auto, pallas, jnp}``).
 """
-from repro.kernels import distill_kl, flash_attention, kmeans_dist, kulsif_rbf
+from repro.kernels import (dispatch, distill_kl, flash_attention, kmeans_dist,
+                           kulsif_rbf)
+from repro.kernels.dispatch import kernel_backend as kernel_backend

@@ -1,4 +1,4 @@
-"""Jit'd public wrapper for the distill_kl kernel."""
+"""Jit'd public wrappers for the distill_kl kernels (fwd + custom-VJP)."""
 from __future__ import annotations
 
 import functools
@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret, pad_to
-from repro.kernels.distill_kl.kernel import BLOCK_N, kd_kl_pallas
+from repro.kernels.distill_kl.kernel import (BLOCK_N, kd_kl_bwd_pallas,
+                                             kd_kl_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -25,3 +26,52 @@ def kd_kl_per_sample(student, teacher, temperature, *,
         interpret = default_interpret()
     return _run(jnp.asarray(student), jnp.asarray(teacher),
                 jnp.float32(temperature), block_n, interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("temperature", "block_n", "interpret"))
+def _run_bwd(student, teacher, g, temperature, block_n, interpret):
+    sp, n = pad_to(student, 0, block_n)
+    tp, _ = pad_to(teacher, 0, block_n)
+    gp, _ = pad_to(g, 0, block_n)      # zero cotangent => zero pad grads
+    ds, dt = kd_kl_bwd_pallas(sp, tp, gp, temperature, block_n=block_n,
+                              interpret=interpret)
+    return ds[:n], dt[:n]
+
+
+@functools.lru_cache(maxsize=None)
+def _vjp_fn(temperature: float, block_n: int, interpret: bool):
+    """Build (and cache) the custom-VJP op for one static (T, block) combo.
+
+    The residuals are the raw logits — both softmaxes are recomputed by the
+    backward kernel, so nothing beyond the inputs is saved for backward.
+    """
+
+    @jax.custom_vjp
+    def f(student, teacher):
+        return _run(student, teacher, jnp.float32(temperature), block_n,
+                    interpret)
+
+    def fwd(student, teacher):
+        return f(student, teacher), (student, teacher)
+
+    def bwd(res, g):
+        student, teacher = res
+        return _run_bwd(student, teacher, g, temperature, block_n, interpret)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def kd_kl_per_sample_vjp(student, teacher, temperature: float, *,
+                         block_n: int = BLOCK_N,
+                         interpret: bool | None = None):
+    """Differentiable per-sample KL: Pallas forward, fused Pallas backward.
+
+    ``temperature`` must be a static python float (it is baked into the
+    backward kernel; the FD protocol never differentiates through it).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _vjp_fn(float(temperature), block_n, interpret)(
+        jnp.asarray(student), jnp.asarray(teacher))

@@ -1,6 +1,7 @@
-"""Pure-jnp oracle for the KMeans-DRE distance/threshold kernel."""
+"""Pure-jnp oracles for the KMeans-DRE distance and fused-Lloyd kernels."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -14,3 +15,19 @@ def min_dist_and_mask(x, centroids, threshold):
     d2 = jnp.sum(jnp.square(diff), axis=-1)          # (t, c)
     md = jnp.sqrt(jnp.min(d2, axis=-1))
     return md, md <= threshold
+
+
+def lloyd_step(x, centroids):
+    """Oracle for one fused Lloyd iteration: x (n, d), centroids (k, d) ->
+    (assign (n,) i32, min_d2 (n,), sums (k, d), counts (k,)).
+
+    Naive direct-form distances (cross-checks the kernel algebra) with the
+    explicit one-hot scatter the fused kernel eliminates.
+    """
+    diff = x[:, None, :].astype(jnp.float32) - centroids[None, :, :].astype(jnp.float32)
+    d2 = jnp.sum(jnp.square(diff), axis=-1)          # (n, k)
+    assign = jnp.argmin(d2, axis=-1)
+    one_hot = jax.nn.one_hot(assign, centroids.shape[0], dtype=jnp.float32)
+    sums = one_hot.T @ x.astype(jnp.float32)
+    counts = jnp.sum(one_hot, axis=0)
+    return (assign.astype(jnp.int32), jnp.min(d2, axis=-1), sums, counts)

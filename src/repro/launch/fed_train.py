@@ -42,6 +42,14 @@ def main(argv=None):
                     help="non-participants keep their last-reported proxy "
                          "logits, down-weighted by decay**age: 0 = drop "
                          "them silently, 1 = FedBuff-style full reuse")
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "pallas", "jnp"],
+                    help="hot-path kernel dispatch (repro.kernels.dispatch): "
+                         "auto = Pallas kernels on TPU, jnp reference "
+                         "elsewhere (REPRO_KERNEL_BACKEND overrides); "
+                         "pallas = force the kernels (interpret mode "
+                         "off-TPU — validates the kernel path, not a CPU "
+                         "speedup); jnp = force the reference code")
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--proxy-fraction", type=float, default=0.2)
@@ -70,6 +78,7 @@ def main(argv=None):
         participation_fraction=args.participation,
         participation_policy=args.policy,
         staleness_decay=args.staleness_decay,
+        kernel_backend=args.kernel_backend,
     )
 
     def progress(log):

@@ -1,0 +1,61 @@
+"""Regenerate the default-backend golden round logs.
+
+``tests/test_kernel_dispatch.py`` asserts that federated round logs under
+the *default* kernel backend (auto -> jnp on CPU) stay bit-for-bit
+identical to the logs recorded before the Pallas dispatch layer landed
+(PR 4). The golden file was generated from the pre-dispatch tree; rerun
+this ONLY if an intentional numeric change is being made, and say so in
+the commit message:
+
+    PYTHONPATH=src:tests python tests/_golden_gen.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# the goldens certify the jnp reference path (the CPU default) — pin it so
+# an exported REPRO_KERNEL_BACKEND=pallas can't silently poison them
+os.environ["REPRO_KERNEL_BACKEND"] = "jnp"
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "data" / "golden_rounds.json"
+
+# tiny but real: exercises KMeans-DRE fit + calibration + filter + KL
+# distill (edgefd) and the KuLSIF learn/estimate path (selective-fd)
+CASES = [
+    {"name": "edgefd_loop", "method": "edgefd", "engine": "loop"},
+    {"name": "edgefd_cohort", "method": "edgefd", "engine": "cohort"},
+    {"name": "selectivefd_loop", "method": "selective-fd", "engine": "loop"},
+]
+DATA_KW = dict(n_train=600, n_test=200)
+
+
+def run_case(case):
+    from repro.common.types import FedConfig
+    from repro.fed import simulator
+
+    cfg = FedConfig(num_clients=4, rounds=2, method=case["method"],
+                    scenario="strong", proxy_batch=128, batch_size=32,
+                    seed=0, engine=case["engine"])
+    res = simulator.run(cfg, "mnist_feat", **DATA_KW)
+    return [
+        {"round": log.round, "mean_acc": log.mean_acc, "accs": log.accs,
+         "local_loss": log.local_loss, "distill_loss": log.distill_loss,
+         "id_fraction": log.id_fraction, "bytes_up": log.bytes_up,
+         "bytes_down": log.bytes_down}
+        for log in res.rounds
+    ]
+
+
+def main():
+    out = {case["name"]: run_case(case) for case in CASES}
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()
