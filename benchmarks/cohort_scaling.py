@@ -88,13 +88,22 @@ def bench_engine(engine: str, num_clients: int, rounds: int,
     warm_s = time.perf_counter() - t0
 
     times = []
+    logs = []
     up0 = server.bytes_received
     for r in range(1, rounds + 1):
         log = run_round(r, eng, server, method, cfg, x_test, y_test)
         times.append(log.wall_s)
+        logs.append(log)
+    # per-phase wall-clock breakdown (median across timed rounds) — the
+    # scheduler produces it for free; it shows where each engine's round
+    # time actually goes (RoundLog.phase_s)
+    phase_keys = sorted(set().union(*(log.phase_s for log in logs)))
+    phase_s = {k: float(np.median([log.phase_s.get(k, 0.0) for log in logs]))
+               for k in phase_keys}
     return {"engine": engine, "clients": num_clients,
             "devices": num_devices, "fraction": fraction,
             "warmup_s": warm_s, "round_s": float(np.median(times)),
+            "phase_s": phase_s,
             "bytes_up_per_round": (server.bytes_received - up0) // rounds,
             "final_acc": log.mean_acc}
 

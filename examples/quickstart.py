@@ -35,6 +35,23 @@ cfg = FedConfig(
     participation_fraction=1.0,
     participation_policy="uniform",
     staleness_decay=0.0,
+    # Round scheduling (repro.fed.scheduler): "sync" runs the lockstep
+    # Algorithm-1 phase order (local_train -> report -> aggregate ->
+    # distill -> eval, one round at a time — bit-for-bit the paper runs);
+    # "overlap" pipelines up to max_inflight rounds, so round r+1 trains
+    # and reports while round r still aggregates/distills through the
+    # staleness buffer — the straggler-bound async regime. The per-round
+    # log carries a per-phase wall-clock breakdown (log.phase_s) and the
+    # round's finish time on a simulated straggler clock
+    # (log.sim_finish_s; per-client speeds in [1, straggler_factor] drawn
+    # deterministically from (seed, client) — repro.fed.clock). The CLI
+    # spells it
+    #   python -m repro.launch.fed_train --round-mode overlap \
+    #       --max-inflight 2 --straggler-factor 4.0
+    # "auto" (the default) = sync unless REPRO_ROUND_MODE says otherwise.
+    round_mode="auto",
+    max_inflight=2,
+    straggler_factor=4.0,
     # Hot-path kernels (repro.kernels.dispatch): "auto" runs the Pallas
     # TPU kernels (fused Lloyd fit, fused KD-KL fwd+bwd, tiled KuLSIF
     # gram) on TPU and the jnp reference elsewhere — on CPU this is

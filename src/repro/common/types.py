@@ -165,6 +165,23 @@ class FedConfig:
     # rounds since the client last reported). 0.0 drops non-participants
     # silently; 1.0 reuses stale knowledge at full weight (FedBuff-style).
     staleness_decay: float = 0.0
+    # round scheduling (repro.fed.scheduler): "sync" replays the lockstep
+    # Algorithm-1 phase order (bit-for-bit the legacy round logs);
+    # "overlap" admits up to max_inflight rounds concurrently — round r+1
+    # trains/reports while round r aggregates/distills, with stale
+    # knowledge draining through the staleness buffer. "auto" = sync
+    # unless the REPRO_ROUND_MODE env var says otherwise (a CI vehicle,
+    # like REPRO_KERNEL_BACKEND; explicit sync/overlap always win).
+    round_mode: str = "auto"
+    # overlap only: how many rounds may be in flight at once (1 = lockstep;
+    # round r's local_train admits once round r - max_inflight retired)
+    max_inflight: int = 2
+    # simulated straggler clock (repro.fed.clock): per-client slowdown
+    # multipliers drawn deterministically from (seed, client) in
+    # [1, straggler_factor]; 1.0 = homogeneous fleet. Pure accounting — it
+    # never changes numerics, only RoundLog.sim_finish_s (the axis on
+    # which overlap beats sync, see benchmarks/async_rounds.py).
+    straggler_factor: float = 4.0
     # kernel backend for the round hot paths (repro.kernels.dispatch):
     # "auto" = Pallas kernels on TPU, jnp reference elsewhere (also honors
     # the REPRO_KERNEL_BACKEND env var / kernel_backend() context manager);

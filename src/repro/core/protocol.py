@@ -4,8 +4,16 @@
 ``run_experiment`` wires data → clients → rounds → evaluation and returns
 a result record (accuracy history per client + communication accounting).
 
-The round logic is written against a small *client engine* interface so the
-same protocol drives two execution strategies:
+Both are thin drivers over the *round phase graph* in
+``repro.fed.scheduler``: a round decomposes into named phase nodes
+(``local_train → report → aggregate → distill → eval``) with declared
+data dependencies, and ``FedConfig.round_mode`` selects how the graph is
+executed — ``sync`` replays the lockstep Algorithm-1 order bit-for-bit,
+``overlap`` pipelines up to ``max_inflight`` rounds (round r+1 trains
+while round r aggregates through the staleness buffer).
+
+The phase bodies are written against a small *client engine* interface so
+the same graph drives two execution strategies:
 
   * ``LoopEngine`` (here) — iterate a ``List[Client]`` one at a time.
     Always correct, required for heterogeneous architectures, slow: one
@@ -14,15 +22,18 @@ same protocol drives two execution strategies:
     into leading-axis pytrees and run every per-client op under ``vmap``
     (one compiled call per round phase for the whole cohort).
 
-Both produce identical ``RoundLog`` streams for the same seed (see
+Engines expose one entry point per phase (``phase_local_train``,
+``phase_report``, ``phase_classwise_report``, ``phase_distill``,
+``phase_distill_private``, ``phase_eval``); the historical ``*_all``
+mega-call names remain as thin aliases for existing callers. Both engines
+produce identical ``RoundLog`` streams for the same seed (see
 ``tests/test_cohort_parity.py``); ``FedConfig.engine`` selects one.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 import warnings
-from typing import TYPE_CHECKING, Callable, List, Optional, Sequence
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -51,6 +62,13 @@ class RoundLog:
     # and the mean age of the aggregated reports in rounds (0.0 = all fresh)
     participants: Optional[List[int]] = None
     mean_staleness: float = 0.0
+    # per-phase host wall-clock breakdown (repro.fed.scheduler phase nodes;
+    # wall_s is their sum)
+    phase_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # when this round retired on the simulated straggler timeline
+    # (repro.fed.clock) — the axis on which round_mode="overlap" beats
+    # "sync"; see benchmarks/async_rounds.py
+    sim_finish_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -75,11 +93,15 @@ class ExperimentResult:
 class LoopEngine:
     """Reference engine: drives clients one by one (heterogeneous-safe).
 
-    This is the seed implementation of ``run_round`` factored behind the
+    This is the seed implementation of the round phases factored behind the
     engine interface (one behavioral delta: clients with fewer samples than
     the batch size now train one short batch per epoch instead of silently
     skipping local training — see ``repro.fed.batching``); ``CohortEngine``
     must match its outputs up to float tolerance.
+
+    The ``phase_*`` methods are the scheduler's per-phase entry points; the
+    ``*_all`` mega-call names below are thin aliases kept for historical
+    callers.
     """
 
     def __init__(self, clients: Sequence["Client"]):
@@ -109,13 +131,14 @@ class LoopEngine:
         for i, c in enumerate(self.clients):
             c.learn_dre(jax.random.fold_in(key, i))
 
-    def local_train_all(self, epochs: int, batch_size: int,
-                        participants=None) -> List[float]:
+    # ------------------------------------------------ per-phase entry points
+    def phase_local_train(self, epochs: int, batch_size: int,
+                          participants=None) -> List[float]:
         part = self._part(participants)
         return [c.local_train(epochs, batch_size) if part[i] else 0.0
                 for i, c in enumerate(self.clients)]
 
-    def classwise_means_all(self, participants=None):
+    def phase_classwise_report(self, participants=None):
         part = self._part(participants)
         k = self.clients[0].num_classes
         # zero counts: a sampled-out client contributes nothing classwise
@@ -123,7 +146,7 @@ class LoopEngine:
         return [c.classwise_means() if part[i] else skipped
                 for i, c in enumerate(self.clients)]
 
-    def proxy_logits_and_masks(self, px, powner, participants=None):
+    def phase_report(self, px, powner, participants=None):
         """Returns (logits (C, t, K), masks (C, t)) as numpy arrays;
         sampled-out clients get zero logits and all-False masks (the
         staleness buffer replaces those rows with their last report)."""
@@ -139,16 +162,16 @@ class LoopEngine:
             masks[i] = np.asarray(c.filter_mask(px, powner).mask)
         return logits, masks
 
-    def distill_all(self, px, teacher, weight, epochs: int,
-                    batch_size: int, participants=None) -> List[float]:
+    def phase_distill(self, px, teacher, weight, epochs: int,
+                      batch_size: int, participants=None) -> List[float]:
         part = self._part(participants)
         return [c.distill(px, teacher, weight, epochs, batch_size)
                 if part[i] else 0.0
                 for i, c in enumerate(self.clients)]
 
-    def distill_private_all(self, teacher_by_class, valid_by_class,
-                            epochs: int, batch_size: int,
-                            participants=None) -> List[float]:
+    def phase_distill_private(self, teacher_by_class, valid_by_class,
+                              epochs: int, batch_size: int,
+                              participants=None) -> List[float]:
         part = self._part(participants)
         out = []
         for i, c in enumerate(self.clients):
@@ -160,8 +183,33 @@ class LoopEngine:
             out.append(c.distill(c.x, teacher, w, epochs, batch_size))
         return out
 
-    def evaluate_all(self, x_test, y_test) -> List[float]:
+    def phase_eval(self, x_test, y_test) -> List[float]:
         return [c.evaluate(x_test, y_test) for c in self.clients]
+
+    # -------------------------- historical mega-call names (thin aliases)
+    def local_train_all(self, epochs: int, batch_size: int,
+                        participants=None) -> List[float]:
+        return self.phase_local_train(epochs, batch_size, participants)
+
+    def classwise_means_all(self, participants=None):
+        return self.phase_classwise_report(participants)
+
+    def proxy_logits_and_masks(self, px, powner, participants=None):
+        return self.phase_report(px, powner, participants)
+
+    def distill_all(self, px, teacher, weight, epochs: int,
+                    batch_size: int, participants=None) -> List[float]:
+        return self.phase_distill(px, teacher, weight, epochs, batch_size,
+                                  participants)
+
+    def distill_private_all(self, teacher_by_class, valid_by_class,
+                            epochs: int, batch_size: int,
+                            participants=None) -> List[float]:
+        return self.phase_distill_private(teacher_by_class, valid_by_class,
+                                          epochs, batch_size, participants)
+
+    def evaluate_all(self, x_test, y_test) -> List[float]:
+        return self.phase_eval(x_test, y_test)
 
 
 def as_engine(clients_or_engine, engine: str = "loop", *,
@@ -207,102 +255,44 @@ def engine_from_config(clients_or_engine, cfg: FedConfig):
 
 
 # ---------------------------------------------------------------------------
-# Protocol
+# Protocol — thin drivers over the phase-graph scheduler
 # ---------------------------------------------------------------------------
+
+def _scheduler(engine, server: "Server", method: Method, cfg: FedConfig,
+               x_test, y_test):
+    # lazy import, like as_engine: core must not import fed at load time
+    from repro.fed.scheduler import RoundScheduler
+    return RoundScheduler(engine, server, method, cfg, x_test, y_test)
+
 
 def run_round(r: int, clients, server: "Server", method: Method,
               cfg: FedConfig, x_test, y_test) -> RoundLog:
-    # a raw client list must honor cfg.engine — dropping it silently ran
-    # the slow loop engine under engine="cohort". An engine built here dies
-    # with this call, so its state must flow back to the Client objects
-    # below. NOTE: that also means a raw list re-stacks and re-jits the
-    # cohort phases every round — multi-round callers should build the
-    # engine once (simulator.build_engine / run_experiment) and pass it in.
+    """One round through the phase graph.
+
+    A single round cannot overlap with anything, so ``round_mode="overlap"``
+    degenerates to the sync phase order here — multi-round callers who want
+    pipelining should go through ``run_experiment`` (one scheduler instance
+    spanning all rounds). The scheduler validates the config on every entry
+    path, so a direct caller cannot slip a zero/negative/overful
+    ``participation_fraction`` past the protocol.
+
+    NOTE: a raw client list must honor ``cfg.engine`` — an engine built
+    here dies with this call, so its state must flow back to the Client
+    objects below. That also means a raw list re-stacks and re-jits the
+    cohort phases every round — multi-round callers should build the
+    engine once (``simulator.build_engine`` / ``run_experiment``) and pass
+    it in.
+    """
     engine = engine_from_config(clients, cfg)
     transient = engine is not clients
-    t0 = time.perf_counter()
-    part = None
-    mean_staleness = 0.0
-    if cfg.participation_fraction > 1.0:
-        # catch this on every entry path, not only simulator.run — a direct
-        # run_round/run_experiment caller (e.g. the benchmark) must not
-        # silently fall back to full participation
-        raise ValueError("participation_fraction must be in (0, 1], got "
-                         f"{cfg.participation_fraction!r}")
-    if cfg.participation_fraction < 1.0:
-        # lazy import, like as_engine: core must not import fed at load time
-        from repro.fed.participation import sample_participants
-        sizes = None
-        if cfg.participation_policy == "weighted":
-            sizes = np.asarray([len(c.y) for c in engine.clients], np.int64)
-        part = sample_participants(
-            r, engine.num_clients, cfg.participation_fraction,
-            cfg.participation_policy, seed=cfg.seed, data_sizes=sizes)
-    # participants is passed as a kwarg only when a subset was actually
-    # sampled, so pre-existing engines with the historical interface keep
-    # working at participation_fraction=1 (and the legacy call sequence is
-    # preserved bit-for-bit)
-    kw = {} if part is None else {"participants": part}
-    local_losses = engine.local_train_all(cfg.local_epochs, cfg.batch_size,
-                                          **kw)
-    distill_losses: List[float] = []
-    id_frac = 1.0
-
-    if method.name == "indlearn":
-        pass  # no collaboration
-    elif method.data_free:
-        means_counts = engine.classwise_means_all(**kw)
-        teacher_by_class, valid_by_class = server.aggregate_classwise(
-            means_counts, count_weighted=method.count_weighted,
-            uploaded_rows=part)
-        distill_losses = engine.distill_private_all(
-            teacher_by_class, valid_by_class, cfg.distill_epochs,
-            cfg.batch_size, **kw)
-    else:
-        idx = server.select_indices(cfg.proxy_batch)      # line 13
-        px = server.proxy.x[idx]
-        powner = server.proxy.owner[idx]
-        logits, masks = engine.proxy_logits_and_masks(px, powner, **kw)
-        if part is None:
-            id_frac = float(masks.mean())
-            teacher, valid = server.aggregate(             # line 15
-                logits, masks, sharpen=method.sharpen,
-                entropy_filter=method.server_filter)
-        else:
-            # ID fraction over the clients that actually reported; the
-            # merged rows below additionally carry stale reuse
-            id_frac = float(masks[part].mean())
-            merged = server.merge_stale(r, part, idx, logits, masks,
-                                        decay=cfg.staleness_decay)
-            mean_staleness = merged.mean_staleness
-            teacher, valid = server.aggregate(             # line 15
-                merged.logits, merged.masks, sharpen=method.sharpen,
-                entropy_filter=method.server_filter,
-                client_weights=merged.client_weights, uploaded_rows=part)
-        w = valid.astype(np.float32)
-        distill_losses = engine.distill_all(               # line 16 / 38–43
-            px, teacher, w, cfg.distill_epochs, cfg.batch_size, **kw)
-
-    accs = engine.evaluate_all(x_test, y_test)
+    log = _scheduler(engine, server, method, cfg, x_test, y_test
+                     ).run_rounds(r, 1)[0]
     if transient and hasattr(engine, "sync_to_clients"):
         # engines that train on stacked device state (CohortEngine) must
         # write params/opt-state back before being discarded, or raw-list
         # callers would silently lose every round's training
         engine.sync_to_clients()
-    return RoundLog(
-        round=r,
-        mean_acc=float(np.mean(accs)),
-        accs=accs,
-        local_loss=float(np.mean(local_losses)),
-        distill_loss=float(np.mean(distill_losses)) if distill_losses else 0.0,
-        id_fraction=id_frac,
-        bytes_up=server.bytes_received,
-        bytes_down=server.bytes_broadcast,
-        wall_s=time.perf_counter() - t0,
-        participants=(None if part is None
-                      else [int(i) for i in np.flatnonzero(part)]),
-        mean_staleness=mean_staleness,
-    )
+    return log
 
 
 def run_experiment(clients, server: "Server", method_name: str,
@@ -311,15 +301,11 @@ def run_experiment(clients, server: "Server", method_name: str,
                    ) -> ExperimentResult:
     engine = engine_from_config(clients, cfg)
     method = get_method(method_name)
-    logs = []
     key = jax.random.PRNGKey(cfg.seed)
     if method.client_filter != "none":                     # Initialization
         engine.learn_dres(key)
-    for r in range(cfg.rounds):                            # Training phase
-        log = run_round(r, engine, server, method, cfg, x_test, y_test)
-        logs.append(log)
-        if progress:
-            progress(log)
+    logs = _scheduler(engine, server, method, cfg, x_test, y_test
+                      ).run_rounds(0, cfg.rounds, progress=progress)
     if engine is not clients and hasattr(engine, "sync_to_clients"):
         # raw-list callers hold only the Client objects — an engine built
         # here must write its trained stacked state back before vanishing

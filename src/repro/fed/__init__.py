@@ -1,6 +1,8 @@
 from repro.fed import simulator
 from repro.fed.batching import epoch_batches, steps_per_epoch
 from repro.fed.client import Client
+from repro.fed.clock import SimTimeline, client_speeds
 from repro.fed.cohort import CohortEngine
 from repro.fed.mesh import build_client_mesh
+from repro.fed.scheduler import RoundScheduler
 from repro.fed.server import Server

@@ -1,0 +1,98 @@
+"""Simulated straggler clock: deterministic per-client speeds + a timeline.
+
+A single host executes every round phase back-to-back, so "overlapping
+rounds beat lockstep rounds" is invisible in host wall-clock — the win
+lives in the *deployment* timeline, where every edge client runs in
+parallel at its own speed and the slowest participant gates each
+synchronous barrier. This module prices a phase schedule onto that
+timeline:
+
+``client_speeds``
+    ``(C,)`` slowdown multipliers in ``[1, straggler_factor]``, each drawn
+    deterministically from ``(seed, client)`` and nothing else — stable
+    across rounds, participation subsets, engines and client-count
+    changes (client ``c`` keeps its speed when the fleet grows).
+
+``SimTimeline``
+    Event accounting over two resource kinds: one lane per client (clients
+    run in parallel with each other; each client is serial with itself)
+    and one serial server. The phase-graph scheduler
+    (``repro.fed.scheduler``) replays its *host* execution order through
+    the timeline, so per-client data dependencies are respected by
+    construction: a lane is occupied in exactly the order the numerics
+    consumed it.
+
+The clock is pure accounting. It never reorders host execution and never
+touches numerics; it only prices the schedule the scheduler chose. Eval
+phases are priced at zero: evaluating every client against the held-out
+test set is a simulation-side measurement, not deployment work.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def client_speeds(num_clients: int, *, seed: int = 0,
+                  straggler_factor: float = 4.0) -> np.ndarray:
+    """``(C,)`` per-client slowdown multipliers in ``[1, straggler_factor]``.
+
+    ``straggler_factor=1`` is a homogeneous fleet (every multiplier exactly
+    1). Each entry depends on ``(seed, client)`` only, so the draw is
+    reproducible per client regardless of fleet size or round count.
+    """
+    if straggler_factor < 1.0:
+        raise ValueError(
+            f"straggler_factor must be >= 1.0 (1.0 = homogeneous fleet), "
+            f"got {straggler_factor!r}")
+    speeds = np.ones((num_clients,), np.float64)
+    if straggler_factor == 1.0:
+        return speeds
+    for c in range(num_clients):
+        u = np.random.default_rng(
+            np.random.SeedSequence([seed % 2**32, c, 0xC10C])).random()
+        speeds[c] = 1.0 + (straggler_factor - 1.0) * u
+    return speeds
+
+
+class SimTimeline:
+    """Simulated-deployment event clock: client lanes + one serial server.
+
+    ``client_phase``/``server_phase`` advance the timeline by one phase
+    node and return the node's simulated completion time (the barrier at
+    which every participant of the phase has finished). Callers feed nodes
+    in host execution order; per-lane occupancy then encodes the true
+    data-dependency order automatically.
+    """
+
+    def __init__(self, speeds: np.ndarray):
+        self.speeds = np.asarray(speeds, np.float64)
+        self.client_free = np.zeros((len(self.speeds),), np.float64)
+        self.server_free = 0.0
+
+    def client_phase(self, participants: Optional[np.ndarray], base_s: float,
+                     ready_s: float = 0.0) -> float:
+        """All participating clients run the phase in parallel: client ``c``
+        starts at ``max(ready_s, its lane's free time)`` and takes
+        ``base_s * speed[c]``. Returns the barrier (latest finish); with no
+        participants the phase completes at ``ready_s``."""
+        if participants is None:
+            ids = np.arange(len(self.speeds))
+        else:
+            ids = np.flatnonzero(np.asarray(participants, bool))
+        end = ready_s
+        for c in ids:
+            start = max(ready_s, self.client_free[c])
+            finish = start + base_s * self.speeds[c]
+            self.client_free[c] = finish
+            end = max(end, finish)
+        return end
+
+    def server_phase(self, base_s: float, ready_s: float = 0.0) -> float:
+        """The server is one serial resource (aggregation runs round by
+        round): the phase starts when both the server and its inputs are
+        ready and takes ``base_s``."""
+        start = max(ready_s, self.server_free)
+        self.server_free = start + base_s
+        return self.server_free

@@ -730,19 +730,22 @@ class CohortEngine:
         for cohort in self.cohorts:
             cohort.learn_dres(key)
 
-    def local_train_all(self, epochs: int, batch_size: int,
-                        participants=None) -> List[float]:
+    # ------------------------------------------------ per-phase entry points
+    # (driven by repro.fed.scheduler; the *_all mega-call names below are
+    # thin aliases kept for historical callers)
+    def phase_local_train(self, epochs: int, batch_size: int,
+                          participants=None) -> List[float]:
         return self._scatter(
             [c.local_train(epochs, batch_size,
                            part=self._part_for(c, participants))
              for c in self.cohorts])
 
-    def classwise_means_all(self, participants=None):
+    def phase_classwise_report(self, participants=None):
         return self._scatter(
             [c.classwise_means(part=self._part_for(c, participants))
              for c in self.cohorts])
 
-    def proxy_logits_and_masks(self, px, powner, participants=None):
+    def phase_report(self, px, powner, participants=None):
         t = len(px)
         k = self.clients[0].num_classes
         logits = np.zeros((len(self.clients), t, k), np.float32)
@@ -754,25 +757,50 @@ class CohortEngine:
                                                           part=part)
         return logits, masks
 
-    def distill_all(self, px, teacher, weight, epochs: int,
-                    batch_size: int, participants=None) -> List[float]:
+    def phase_distill(self, px, teacher, weight, epochs: int,
+                      batch_size: int, participants=None) -> List[float]:
         return self._scatter(
             [c.distill(px, teacher, weight, epochs, batch_size,
                        part=self._part_for(c, participants))
              for c in self.cohorts])
 
-    def distill_private_all(self, teacher_by_class, valid_by_class,
-                            epochs: int, batch_size: int,
-                            participants=None) -> List[float]:
+    def phase_distill_private(self, teacher_by_class, valid_by_class,
+                              epochs: int, batch_size: int,
+                              participants=None) -> List[float]:
         return self._scatter(
             [c.distill_private(teacher_by_class, valid_by_class, epochs,
                                batch_size,
                                part=self._part_for(c, participants))
              for c in self.cohorts])
 
-    def evaluate_all(self, x_test, y_test) -> List[float]:
+    def phase_eval(self, x_test, y_test) -> List[float]:
         return self._scatter([c.evaluate(x_test, y_test)
                               for c in self.cohorts])
+
+    # -------------------------- historical mega-call names (thin aliases)
+    def local_train_all(self, epochs: int, batch_size: int,
+                        participants=None) -> List[float]:
+        return self.phase_local_train(epochs, batch_size, participants)
+
+    def classwise_means_all(self, participants=None):
+        return self.phase_classwise_report(participants)
+
+    def proxy_logits_and_masks(self, px, powner, participants=None):
+        return self.phase_report(px, powner, participants)
+
+    def distill_all(self, px, teacher, weight, epochs: int,
+                    batch_size: int, participants=None) -> List[float]:
+        return self.phase_distill(px, teacher, weight, epochs, batch_size,
+                                  participants)
+
+    def distill_private_all(self, teacher_by_class, valid_by_class,
+                            epochs: int, batch_size: int,
+                            participants=None) -> List[float]:
+        return self.phase_distill_private(teacher_by_class, valid_by_class,
+                                          epochs, batch_size, participants)
+
+    def evaluate_all(self, x_test, y_test) -> List[float]:
+        return self.phase_eval(x_test, y_test)
 
     def sync_to_clients(self) -> None:
         for cohort in self.cohorts:

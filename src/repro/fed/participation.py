@@ -145,6 +145,7 @@ class StalenessBuffer:
         self.masks = np.zeros((num_clients, proxy_size), bool)
         self.reported = np.zeros((num_clients,), bool)   # ever reported
         self.last_round = np.zeros((num_clients,), np.int64)
+        self._last_merge_round: Optional[int] = None
 
     def merge(self, round_idx: int, participants, idx, logits, masks,
               decay: float) -> StaleMerge:
@@ -154,7 +155,19 @@ class StalenessBuffer:
         ``logits``/``masks``: engine outputs whose non-participant rows are
         zeros/False (they are replaced here). Returns the merged arrays
         plus the per-client weights ``decay ** age`` for aggregation.
+
+        Merges must arrive in non-decreasing round order: the age math
+        (``round_idx - last_round``) silently goes negative otherwise. The
+        overlap scheduler guarantees in-order ingestion via its order
+        edges; this guard keeps a direct caller honest.
         """
+        if (self._last_merge_round is not None
+                and round_idx < self._last_merge_round):
+            raise ValueError(
+                f"staleness buffer reports must arrive in round order: got "
+                f"round {round_idx} after round {self._last_merge_round} — "
+                "reusing one Server across experiments needs a fresh buffer")
+        self._last_merge_round = round_idx
         part = np.asarray(participants, bool)
         logits = np.asarray(logits, np.float32)
         masks = np.asarray(masks, bool)

@@ -1,0 +1,378 @@
+"""Phase-graph round scheduler: lockstep (sync) and overlapping (overlap).
+
+Algorithm 1's training iteration is not one monolithic step — it is five
+phases with explicit data dependencies::
+
+    local_train ──▶ report ──▶ aggregate ──▶ distill ──▶ eval
+
+(``report``/``aggregate``/``distill`` are the proxy-logit exchange for the
+distillation methods, the class-wise exchange for the data-free methods,
+and absent for ``indlearn``.) This module makes that graph explicit: every
+round contributes one node per phase, nodes declare their dependencies,
+and a deterministic executor runs whatever is ready. ``FedConfig.
+round_mode`` selects between two dependency sets:
+
+``sync`` (the default)
+    ``local_train(r)`` additionally depends on ``eval(r-1)`` — a full
+    barrier between rounds. The executor then replays the exact legacy
+    ``run_round`` phase order, bit-for-bit (golden-pinned in
+    ``tests/test_scheduler.py``).
+
+``overlap``
+    ``local_train(r)`` depends on ``eval(r - max_inflight)`` instead, so
+    up to ``max_inflight`` rounds are in flight at once: round ``r+1``
+    trains and reports while round ``r`` aggregates and distills, with
+    non-participant knowledge draining through the server's existing
+    ``StalenessBuffer`` (reports are ingested in round order, so buffer
+    ages never go negative). Numerically this is a *different protocol* —
+    round ``r+1`` trains on models that have not yet seen round ``r``'s
+    teacher — which is exactly the asynchrony edge deployments pay for
+    overlap; final accuracy stays within tolerance of lockstep
+    (``benchmarks/async_rounds.py``).
+
+The executor's ready-node policy is what creates the pipeline: client-side
+*front* phases (``local_train``, ``report``) run before server-side
+*drain* phases (``aggregate``, ``distill``, ``eval``), oldest round first
+within each class. Under ``sync`` only one node is ever ready, so the
+policy degenerates to the lockstep order; under ``overlap`` it interleaves
+rounds like a software pipeline. The policy is engine-independent, so loop
+== cohort == mesh-sharded round logs still match under ``overlap``.
+
+Every node execution is timed (``RoundLog.phase_s``) and priced onto the
+simulated straggler timeline (``repro.fed.clock``): clients run in
+parallel at deterministic per-client speeds, the server is one serial
+resource, and ``RoundLog.sim_finish_s`` records when the round retires on
+that timeline. That is the axis on which overlap measurably beats sync on
+a single host (``BENCH_async.json``).
+
+``REPRO_ROUND_MODE`` (env) fills in for ``round_mode="auto"`` the way
+``REPRO_KERNEL_BACKEND`` does for the kernel dispatch layer — a CI
+vehicle for running the whole test suite through the overlap scheduler.
+Explicit ``sync``/``overlap`` always win over the env var.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.protocol import RoundLog
+from repro.fed.clock import SimTimeline, client_speeds
+from repro.fed.participation import sample_participants
+
+ROUND_MODES = ("sync", "overlap")
+# the five phase names, in intra-round dependency order
+PHASE_ORDER = ("local_train", "report", "aggregate", "distill", "eval")
+# client-side phases that admit new rounds into the pipeline; the rest
+# drain old ones ("eval" is bookkeeping but retires the round, so it
+# drains too)
+FRONT_PHASES = frozenset({"local_train", "report"})
+# phases priced on client lanes of the simulated timeline ("aggregate" is
+# the serial server resource, "eval" is free measurement)
+CLIENT_PHASES = frozenset({"local_train", "report", "distill"})
+
+
+def resolve_round_mode(mode: Optional[str]) -> str:
+    """``auto`` → the ``REPRO_ROUND_MODE`` env var if set, else ``sync``.
+
+    Explicit ``sync``/``overlap`` always win — the env var exists so CI can
+    run the whole suite through the overlap scheduler without touching
+    every config (mirroring ``REPRO_KERNEL_BACKEND``)."""
+    if mode in (None, "auto"):
+        env = os.environ.get("REPRO_ROUND_MODE")
+        # an empty or "auto" env value means "no opinion" (the CI matrix
+        # exports the literal matrix cell, which is "auto" off the
+        # overlap entry)
+        mode = env if env not in (None, "", "auto") else "sync"
+    if mode not in ROUND_MODES:
+        raise ValueError(f"unknown round_mode {mode!r}; known: auto, "
+                         + ", ".join(ROUND_MODES))
+    return mode
+
+
+def validate_config(cfg) -> None:
+    """Fail fast on an inconsistent scheduler config (FedConfig-like)."""
+    resolve_round_mode(cfg.round_mode)
+    if cfg.max_inflight < 1:
+        raise ValueError(
+            f"max_inflight must be >= 1 (1 = lockstep), got "
+            f"{cfg.max_inflight!r}")
+    if cfg.straggler_factor < 1.0:
+        raise ValueError(
+            f"straggler_factor must be >= 1.0 (1.0 = homogeneous fleet), "
+            f"got {cfg.straggler_factor!r}")
+    f = cfg.participation_fraction
+    if not 0.0 < f <= 1.0:
+        raise ValueError(
+            f"participation_fraction must be in (0, 1], got {f!r}")
+
+
+def round_phases(method) -> Tuple[str, ...]:
+    """The phase nodes one round of ``method`` contributes to the graph."""
+    if method.name == "indlearn":  # no collaboration: train, then measure
+        return ("local_train", "eval")
+    return PHASE_ORDER
+
+
+def _entry(engine, phase_name: str, legacy_name: str) -> Callable:
+    """Resolve an engine phase entry point, preferring the per-phase
+    interface and falling back to the historical ``*_all`` mega-call (so
+    pre-built duck-typed engines keep working unchanged)."""
+    fn = getattr(engine, phase_name, None)
+    return fn if fn is not None else getattr(engine, legacy_name)
+
+
+class _RoundState:
+    """Mutable state threaded between one round's phase nodes."""
+
+    __slots__ = ("r", "part", "kw", "idx", "px", "powner", "means_counts",
+                 "teacher", "valid", "teacher_by_class", "valid_by_class",
+                 "local_losses", "distill_losses", "id_frac",
+                 "mean_staleness", "accs", "phase_s", "sim_finish_s")
+
+    def __init__(self, r: int):
+        self.r = r
+        self.part = None            # participation mask (None = everyone)
+        self.kw: Dict = {}          # engine kwargs ({} keeps the legacy
+        #                             call sequence at fraction 1)
+        self.idx = None             # proxy indices / batch / owners
+        self.px = None
+        self.powner = None
+        self.means_counts = None    # data-free report payload
+        self.teacher = None         # aggregation outputs
+        self.valid = None
+        self.teacher_by_class = None
+        self.valid_by_class = None
+        self.local_losses: List[float] = []
+        self.distill_losses: List[float] = []
+        self.id_frac = 1.0
+        self.mean_staleness = 0.0
+        self.accs = None
+        self.phase_s: Dict[str, float] = {}
+        self.sim_finish_s = 0.0
+
+
+class RoundScheduler:
+    """Executes the round phase graph over an engine/server pair.
+
+    One scheduler instance owns one contiguous run of rounds: the straggler
+    timeline, the execution trace and the server's in-flight report records
+    all live here. ``run_round``/``run_experiment`` are thin drivers over
+    this class.
+
+    ``sim_phase_costs`` (tests/benchmark harnesses) replaces the measured
+    per-phase host seconds with fixed base costs, making the simulated
+    timeline fully deterministic; ``None`` (the default) prices phases at
+    their measured wall-clock.
+    """
+
+    def __init__(self, engine, server, method, cfg, x_test, y_test, *,
+                 sim_phase_costs: Optional[Dict[str, float]] = None):
+        validate_config(cfg)
+        self.engine = engine
+        self.server = server
+        self.method = method
+        self.cfg = cfg
+        self.x_test = x_test
+        self.y_test = y_test
+        self.mode = resolve_round_mode(cfg.round_mode)
+        # sync IS the overlap graph at pipeline depth 1
+        self.max_inflight = cfg.max_inflight if self.mode == "overlap" else 1
+        self.phases = round_phases(method)
+        self.sim_phase_costs = sim_phase_costs
+        self.timeline = SimTimeline(client_speeds(
+            engine.num_clients, seed=cfg.seed,
+            straggler_factor=cfg.straggler_factor))
+        # (phase, round) in host execution order — the determinism tests
+        # pin this, and it is the record of what the pipeline actually did
+        self.trace: List[Tuple[str, int]] = []
+        self._sim_end: Dict[Tuple[str, int], float] = {}
+        # engine entry points resolved once (per-phase interface, with the
+        # historical *_all fallback for pre-built engines)
+        self._local_train = _entry(engine, "phase_local_train",
+                                   "local_train_all")
+        self._report = _entry(engine, "phase_report",
+                              "proxy_logits_and_masks")
+        self._classwise = _entry(engine, "phase_classwise_report",
+                                 "classwise_means_all")
+        self._distill = _entry(engine, "phase_distill", "distill_all")
+        self._distill_private = _entry(engine, "phase_distill_private",
+                                       "distill_private_all")
+        self._eval = _entry(engine, "phase_eval", "evaluate_all")
+
+    # ------------------------------------------------------------ the graph
+    def _build_deps(self, rounds) -> Dict[Tuple[str, int], List]:
+        """Nodes + declared dependencies for a contiguous round window.
+
+        Each dep is ``(phase, round, kind)``: ``data`` deps gate both host
+        execution and the simulated timeline; ``order`` deps (same phase,
+        previous round) pin host execution order — server rng draws, report
+        ingestion and log assembly must happen in round order — but cost
+        nothing on the timeline (disjoint clients of different rounds
+        genuinely run concurrently; shared clients are serialized by their
+        timeline lanes instead)."""
+        window = set(rounds)
+        nodes: Dict[Tuple[str, int], List] = {}
+        for r in rounds:
+            for i, p in enumerate(self.phases):
+                deps = []
+                if i > 0:  # intra-round chain: the actual data flow
+                    deps.append((self.phases[i - 1], r, "data"))
+                if (r - 1) in window:  # host-order edge
+                    deps.append((p, r - 1, "order"))
+                if i == 0 and (r - self.max_inflight) in window:
+                    # admission: round r enters the pipeline only once
+                    # round r - max_inflight has fully retired
+                    deps.append((self.phases[-1], r - self.max_inflight,
+                                 "data"))
+                nodes[(p, r)] = deps
+        return nodes
+
+    def run_rounds(self, start: int, count: int,
+                   progress: Optional[Callable[[RoundLog], None]] = None
+                   ) -> List[RoundLog]:
+        """Execute rounds ``[start, start + count)`` through the graph."""
+        rounds = range(start, start + count)
+        states = {r: _RoundState(r) for r in rounds}
+        nodes = self._build_deps(rounds)
+        done: set = set()
+        logs: List[RoundLog] = []
+        pending = set(nodes)
+        order = {p: i for i, p in enumerate(self.phases)}
+        while pending:
+            ready = [
+                pr for pr in pending
+                if all(d[1] not in states or (d[0], d[1]) in done
+                       for d in nodes[pr])
+            ]
+            # deterministic pipeline policy: front (client-side) phases
+            # before drain phases, oldest round first, intra-round order
+            # last — under sync exactly one node is ever ready, so this
+            # replays the legacy lockstep order
+            phase, r = min(ready, key=lambda pr: (pr[0] not in FRONT_PHASES,
+                                                  pr[1], order[pr[0]]))
+            self._run_node(phase, states[r], nodes[(phase, r)])
+            pending.remove((phase, r))
+            done.add((phase, r))
+            if phase == self.phases[-1]:
+                log = self._finish_round(states[r])
+                logs.append(log)
+                if progress:
+                    progress(log)
+        return logs
+
+    # ------------------------------------------------------- node execution
+    def _run_node(self, phase: str, st: _RoundState, deps) -> None:
+        self.trace.append((phase, st.r))
+        t0 = time.perf_counter()
+        getattr(self, "_phase_" + phase)(st)
+        dt = time.perf_counter() - t0
+        st.phase_s[phase] = st.phase_s.get(phase, 0.0) + dt
+        self._account(phase, st, deps, dt)
+
+    def _account(self, phase: str, st: _RoundState, deps,
+                 measured_s: float) -> None:
+        """Price the node onto the simulated straggler timeline."""
+        ready_s = max((self._sim_end.get((p, r), 0.0)
+                       for p, r, kind in deps if kind == "data"),
+                      default=0.0)
+        base = (measured_s if self.sim_phase_costs is None
+                else self.sim_phase_costs.get(phase, 0.0))
+        if phase in CLIENT_PHASES:
+            n = (self.engine.num_clients if st.part is None
+                 else int(np.asarray(st.part, bool).sum()))
+            # measured host seconds cover every participant back-to-back;
+            # deployed clients run in parallel, each paying its own share
+            # scaled by its straggler speed
+            end = self.timeline.client_phase(st.part, base / max(n, 1),
+                                             ready_s)
+        elif phase == "aggregate":
+            end = self.timeline.server_phase(base, ready_s)
+        else:  # eval: simulation-side measurement, free on the timeline
+            end = ready_s
+        end = float(end)  # np.float64 would poison RoundLog JSON dumps
+        self._sim_end[(phase, st.r)] = end
+        st.sim_finish_s = end
+
+    # --------------------------------------------------------- phase bodies
+    def _phase_local_train(self, st: _RoundState) -> None:
+        cfg = self.cfg
+        if cfg.participation_fraction < 1.0:
+            sizes = None
+            if cfg.participation_policy == "weighted":
+                sizes = np.asarray([len(c.y) for c in self.engine.clients],
+                                   np.int64)
+            st.part = sample_participants(
+                st.r, self.engine.num_clients, cfg.participation_fraction,
+                cfg.participation_policy, seed=cfg.seed, data_sizes=sizes)
+            # participants is passed as a kwarg only when a subset was
+            # actually sampled, so pre-existing engines with the historical
+            # interface keep working at participation_fraction=1 (and the
+            # legacy call sequence is preserved bit-for-bit)
+            st.kw = {"participants": st.part}
+        st.local_losses = self._local_train(cfg.local_epochs, cfg.batch_size,
+                                            **st.kw)
+
+    def _phase_report(self, st: _RoundState) -> None:
+        cfg = self.cfg
+        if self.method.data_free:  # FKD/PLS upload class-wise means
+            st.means_counts = self._classwise(**st.kw)
+            return
+        st.idx = self.server.select_indices(cfg.proxy_batch)
+        st.px = self.server.proxy.x[st.idx]
+        st.powner = self.server.proxy.owner[st.idx]
+        logits, masks = self._report(st.px, st.powner, **st.kw)
+        # ID fraction over the clients that actually reported; stale rows
+        # merged at aggregation additionally carry reuse
+        st.id_frac = (float(masks.mean()) if st.part is None
+                      else float(masks[st.part].mean()))
+        self.server.ingest_reports(st.r, st.part, st.idx, logits, masks,
+                                   decay=cfg.staleness_decay)
+
+    def _phase_aggregate(self, st: _RoundState) -> None:
+        if self.method.data_free:
+            st.teacher_by_class, st.valid_by_class = \
+                self.server.aggregate_classwise(
+                    st.means_counts, count_weighted=self.method.count_weighted,
+                    uploaded_rows=st.part)
+            st.means_counts = None
+            return
+        st.teacher, st.valid, st.mean_staleness = self.server.aggregate_round(
+            st.r, sharpen=self.method.sharpen,
+            entropy_filter=self.method.server_filter)
+
+    def _phase_distill(self, st: _RoundState) -> None:
+        cfg = self.cfg
+        if self.method.data_free:
+            st.distill_losses = self._distill_private(
+                st.teacher_by_class, st.valid_by_class, cfg.distill_epochs,
+                cfg.batch_size, **st.kw)
+            return
+        w = st.valid.astype(np.float32)
+        st.distill_losses = self._distill(st.px, st.teacher, w,
+                                          cfg.distill_epochs, cfg.batch_size,
+                                          **st.kw)
+
+    def _phase_eval(self, st: _RoundState) -> None:
+        st.accs = self._eval(self.x_test, self.y_test)
+
+    def _finish_round(self, st: _RoundState) -> RoundLog:
+        return RoundLog(
+            round=st.r,
+            mean_acc=float(np.mean(st.accs)),
+            accs=st.accs,
+            local_loss=float(np.mean(st.local_losses)),
+            distill_loss=(float(np.mean(st.distill_losses))
+                          if st.distill_losses else 0.0),
+            id_fraction=st.id_frac,
+            bytes_up=self.server.bytes_received,
+            bytes_down=self.server.bytes_broadcast,
+            wall_s=sum(st.phase_s.values()),
+            participants=(None if st.part is None
+                          else [int(i) for i in np.flatnonzero(st.part)]),
+            mean_staleness=st.mean_staleness,
+            phase_s=dict(st.phase_s),
+            sim_finish_s=st.sim_finish_s,
+        )

@@ -1,8 +1,17 @@
 """Federated server: proxy bookkeeping + aggregation. Trusted entity that
-never trains a model (EdgeFD needs no pre-trained teacher)."""
+never trains a model (EdgeFD needs no pre-trained teacher).
+
+Report *ingest* and *aggregation* are separate steps so in-flight rounds
+can interleave (``repro.fed.scheduler`` with ``round_mode="overlap"``):
+``ingest_reports`` records a round's engine outputs — merging stale rows
+from the ``StalenessBuffer`` at ingest time, while the buffer still
+reflects only earlier rounds — and ``aggregate_round`` later fuses the
+recorded reports into a teacher. Under the lockstep ``sync`` mode the two
+run back-to-back and reproduce the historical single-call path
+bit-for-bit."""
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, NamedTuple, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -11,6 +20,19 @@ from repro.core import aggregation
 from repro.core.filtering import server_entropy_filter
 from repro.data.proxy import ProxyData, select_round_indices
 from repro.fed.participation import StaleMerge, StalenessBuffer
+
+
+class _PendingReports(NamedTuple):
+    """One round's ingested-but-not-yet-aggregated proxy reports.
+
+    Exactly one payload is held: the raw engine outputs on the
+    full-participation path, or the stale-merged rows on the subset path
+    (keeping both would double the in-flight footprint — overlap mode
+    parks up to ``max_inflight`` of these)."""
+    participants: Optional[np.ndarray]   # (C,) bool, None = everyone
+    logits: Optional[np.ndarray]         # (C, t, K); None when merged is set
+    masks: Optional[np.ndarray]          # (C, t);   None when merged is set
+    merged: Optional[StaleMerge]         # stale-filled rows (subset rounds)
 
 
 class Server:
@@ -22,6 +44,9 @@ class Server:
         # lazily-sized staleness buffer (partial participation only): the
         # last report of every client, by proxy-dataset position
         self._stale: Optional[StalenessBuffer] = None
+        # rounds whose reports were ingested but not yet aggregated,
+        # keyed by round index (overlap mode keeps up to max_inflight here)
+        self._pending: Dict[int, _PendingReports] = {}
 
     def select_indices(self, batch: int) -> np.ndarray:
         return select_round_indices(self.rng, self.proxy, batch)
@@ -35,6 +60,55 @@ class Server:
             self._stale = StalenessBuffer(c, len(self.proxy.x), k)
         return self._stale.merge(round_idx, participants, idx, logits, masks,
                                  decay)
+
+    def ingest_reports(self, round_idx: int, participants, idx, logits,
+                       masks, *, decay: float) -> None:
+        """Record one round's engine reports for a later ``aggregate_round``.
+
+        Stale rows are merged *now*: ingests arrive in round order (the
+        scheduler's order edges guarantee it), so the buffer reflects
+        exactly the rounds before this one and report ages can never go
+        negative — even while later rounds' aggregations are still pending.
+        ``participants=None`` (full participation) skips the buffer
+        entirely, keeping the legacy everyone-reports path untouched.
+        """
+        if round_idx in self._pending:
+            raise ValueError(f"round {round_idx} reports already ingested "
+                             "and not yet aggregated")
+        if participants is None:
+            self._pending[round_idx] = _PendingReports(
+                None, logits, masks, None)
+            return
+        merged = self.merge_stale(round_idx, participants, idx, logits,
+                                  masks, decay=decay)
+        self._pending[round_idx] = _PendingReports(
+            participants, None, None, merged)
+
+    def aggregate_round(self, round_idx: int, *,
+                        sharpen: Optional[float] = None,
+                        entropy_filter: bool = False):
+        """Fuse a previously ingested round into (teacher, valid,
+        mean_staleness). Full-participation rounds take the exact legacy
+        ``aggregate`` call (bit-for-bit the historical teacher and byte
+        accounting); subset rounds aggregate the stale-merged rows with
+        per-client staleness weights."""
+        try:
+            p = self._pending.pop(round_idx)
+        except KeyError:
+            raise ValueError(
+                f"no ingested reports for round {round_idx}; call "
+                "ingest_reports first") from None
+        if p.merged is None:
+            teacher, valid = self.aggregate(p.logits, p.masks,
+                                            sharpen=sharpen,
+                                            entropy_filter=entropy_filter)
+            return teacher, valid, 0.0
+        teacher, valid = self.aggregate(
+            p.merged.logits, p.merged.masks, sharpen=sharpen,
+            entropy_filter=entropy_filter,
+            client_weights=p.merged.client_weights,
+            uploaded_rows=p.participants)
+        return teacher, valid, p.merged.mean_staleness
 
     def aggregate(self, logits, masks, *, sharpen: Optional[float] = None,
                   entropy_filter: bool = False, client_weights=None,

@@ -19,7 +19,7 @@ from repro.core.protocol import (ExperimentResult, engine_from_config,
 from repro.data.partition import partition
 from repro.data.proxy import build_proxy
 from repro.data.synthetic import make_dataset
-from repro.fed import participation
+from repro.fed import participation, scheduler
 from repro.fed.client import Client
 from repro.fed.server import Server
 from repro.kernels import dispatch
@@ -103,9 +103,10 @@ def build_engine(clients: List[Client], cfg: FedConfig):
 def run(cfg: FedConfig, dataset_name: str = "mnist_feat", *,
         n_train: int = 5000, n_test: int = 1000, progress=None
         ) -> ExperimentResult:
-    # fail fast on a bad participation/backend config, before any client
-    # is built
+    # fail fast on a bad participation/scheduler/backend config, before
+    # any client is built
     participation.validate_config(cfg)
+    scheduler.validate_config(cfg)
     dispatch.resolve(cfg.kernel_backend)
     clients, server, x_test, y_test = build_experiment(
         cfg, dataset_name, n_train=n_train, n_test=n_test)

@@ -42,6 +42,25 @@ def main(argv=None):
                     help="non-participants keep their last-reported proxy "
                          "logits, down-weighted by decay**age: 0 = drop "
                          "them silently, 1 = FedBuff-style full reuse")
+    ap.add_argument("--round-mode", default="auto",
+                    choices=["auto", "sync", "overlap"],
+                    help="round scheduler (repro.fed.scheduler): sync = "
+                         "lockstep Algorithm-1 phase order (bit-for-bit "
+                         "the legacy logs); overlap = pipeline up to "
+                         "--max-inflight rounds (round r+1 trains/reports "
+                         "while round r aggregates/distills through the "
+                         "staleness buffer); auto = sync unless "
+                         "REPRO_ROUND_MODE says otherwise")
+    ap.add_argument("--max-inflight", type=int, default=2,
+                    help="overlap only: rounds concurrently in flight "
+                         "(1 = lockstep)")
+    ap.add_argument("--straggler-factor", type=float, default=4.0,
+                    help="simulated straggler clock spread "
+                         "(repro.fed.clock): per-client slowdowns drawn "
+                         "deterministically from (seed, client) in "
+                         "[1, factor]; 1.0 = homogeneous fleet. Pure "
+                         "accounting for the sim=... column, never "
+                         "changes numerics")
     ap.add_argument("--kernel-backend", default="auto",
                     choices=["auto", "pallas", "jnp"],
                     help="hot-path kernel dispatch (repro.kernels.dispatch): "
@@ -78,14 +97,26 @@ def main(argv=None):
         participation_fraction=args.participation,
         participation_policy=args.policy,
         staleness_decay=args.staleness_decay,
+        round_mode=args.round_mode,
+        max_inflight=args.max_inflight,
+        straggler_factor=args.straggler_factor,
         kernel_backend=args.kernel_backend,
     )
+
+    # short labels for the per-phase wall-clock breakdown (RoundLog.phase_s)
+    phase_abbrev = {"local_train": "lt", "report": "rep",
+                    "aggregate": "agg", "distill": "dist", "eval": "ev"}
 
     def progress(log):
         extra = ""
         if log.participants is not None:
             extra = (f"  part={len(log.participants)}/{args.clients}"
                      f"  stale={log.mean_staleness:.2f}")
+        if log.phase_s:
+            breakdown = " ".join(
+                f"{phase_abbrev.get(k, k)}={v:.2f}"
+                for k, v in log.phase_s.items())
+            extra += f"  sim={log.sim_finish_s:.2f}s  [{breakdown}]"
         print(f"round {log.round:3d}  acc={log.mean_acc:.4f}  "
               f"id={log.id_fraction:.2f}  local={log.local_loss:.3f}  "
               f"distill={log.distill_loss:.3f}  "

@@ -21,7 +21,9 @@ def check_parity(num_clients: int, devices: int, method: str = "edgefd",
                  scenario: str = "strong",
                  participation_fraction: float = 1.0,
                  participation_policy: str = "uniform",
-                 staleness_decay: float = 0.0) -> None:
+                 staleness_decay: float = 0.0,
+                 round_mode: str = "auto",
+                 max_inflight: int = 2, rounds: int = 2) -> None:
     import numpy as np
 
     from repro.common.types import FedConfig
@@ -31,12 +33,13 @@ def check_parity(num_clients: int, devices: int, method: str = "edgefd",
     for name, engine, ndev in (("loop", "loop", 0),
                                ("cohort", "cohort", 0),
                                ("mesh", "cohort", devices)):
-        cfg = FedConfig(num_clients=num_clients, rounds=2, method=method,
+        cfg = FedConfig(num_clients=num_clients, rounds=rounds, method=method,
                         scenario=scenario, proxy_batch=120, batch_size=32,
                         lr=1e-2, seed=0, engine=engine, num_devices=ndev,
                         participation_fraction=participation_fraction,
                         participation_policy=participation_policy,
-                        staleness_decay=staleness_decay)
+                        staleness_decay=staleness_decay,
+                        round_mode=round_mode, max_inflight=max_inflight)
         results[name] = simulator.run(cfg, "mnist_feat",
                                       n_train=800, n_test=300)
     base = results["loop"]
@@ -67,6 +70,9 @@ def main(argv=None) -> None:
     ap.add_argument("--participation", type=float, default=1.0)
     ap.add_argument("--policy", default="uniform")
     ap.add_argument("--staleness-decay", type=float, default=0.0)
+    ap.add_argument("--round-mode", default="auto")
+    ap.add_argument("--max-inflight", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=2)
     args = ap.parse_args(argv)
 
     # must happen before the first jax import (device count is init-time)
@@ -82,9 +88,12 @@ def main(argv=None) -> None:
         check_parity(c, args.devices,
                      participation_fraction=args.participation,
                      participation_policy=args.policy,
-                     staleness_decay=args.staleness_decay)
+                     staleness_decay=args.staleness_decay,
+                     round_mode=args.round_mode,
+                     max_inflight=args.max_inflight, rounds=args.rounds)
         print(f"PARITY-OK clients={c} devices={args.devices} "
-              f"participation={args.participation}")
+              f"participation={args.participation} "
+              f"round_mode={args.round_mode}")
 
 
 if __name__ == "__main__":

@@ -154,8 +154,12 @@ def test_defaults_reproduce_legacy_logs_bit_for_bit(engine):
     """participation_fraction=1.0, staleness_decay=0 (the defaults) must
     leave the round logs *bit-for-bit* identical to the pre-participation
     protocol — replicated here as the exact legacy call sequence (engine
-    calls without a mask, aggregation without client weights)."""
-    cfg = _cfg(engine, rounds=2)
+    calls without a mask, aggregation without client weights).
+
+    round_mode is pinned to "sync": the legacy sequence IS the lockstep
+    order, so the comparison must not follow the REPRO_ROUND_MODE=overlap
+    CI matrix entry (sync stays the FedConfig default either way)."""
+    cfg = _cfg(engine, rounds=2, round_mode="sync")
     new = simulator.run(cfg, "mnist_feat", n_train=800, n_test=300)
 
     clients, server, x_test, y_test = simulator.build_experiment(

@@ -12,9 +12,15 @@ from repro.fed import simulator
 
 
 def _run(method, scenario, rounds=4, **kw):
+    # round_mode is pinned: these tests assert the *paper's* accuracy
+    # orderings, which are claims about the lockstep Algorithm-1 protocol
+    # — overlap mode trades a slightly different trajectory for round
+    # throughput (its accuracy tolerance is gated by
+    # benchmarks/async_rounds.py and tests/test_scheduler.py), so the
+    # REPRO_ROUND_MODE=overlap CI entry must not move these thresholds.
     cfg = FedConfig(num_clients=5, rounds=rounds, method=method,
                     scenario=scenario, proxy_batch=200, lr=1e-2,
-                    **kw)
+                    round_mode="sync", **kw)
     return simulator.run(cfg, "mnist_feat", n_train=1500, n_test=400)
 
 
