@@ -23,6 +23,33 @@ cfg = FedConfig(
     # CPU-only hosts emulate an N-device host by setting
     # XLA_FLAGS=--xla_force_host_platform_device_count=N before jax loads.
     num_devices=0,
+    # Fleet scale (see benchmarks/scale.py for a C=16384 round):
+    # wave_size=N streams the cohort client axis through the device N
+    # clients at a time — params/opt-state/data stay in host numpy and
+    # peak device memory is bounded by the wave, not the client count
+    # (0 = whole axis device-resident; any wave size reproduces it
+    # bit-for-bit). num_edge_aggregators=E makes the server two-tier:
+    # E edge aggregators each reduce a contiguous client shard (filter +
+    # staleness bookkeeping local) and the root fuses E partial sums
+    # (1 = the flat legacy server, same results either way). The CLI
+    # spells it
+    #   python -m repro.launch.fed_train --engine cohort \
+    #       --wave-size 1024 --edge-aggregators 8
+    wave_size=0,
+    num_edge_aggregators=1,
+    # Traffic realism (repro.fed.clock, all deterministic in (seed,
+    # round, client)): arrival_process "poisson"/"bursty" delays client
+    # arrivals on the simulated timeline (spread = time scale; bursty
+    # clusters clients into arrival_bursts timezone-like spikes),
+    # churn_prob knocks clients out for whole rounds (their last report
+    # drains through the staleness machinery), dropout_prob loses
+    # trained reports mid-round. The CLI spells it
+    #   python -m repro.launch.fed_train --arrival-process bursty \
+    #       --arrival-spread 30 --churn 0.05 --dropout 0.05
+    arrival_process="static",
+    arrival_spread=0.0,
+    churn_prob=0.0,
+    dropout_prob=0.0,
     # Edge clients drop in and out: participation_fraction=0.5 samples
     # half the clients each round (participation_policy: "uniform",
     # "weighted" by data size, or "roundrobin"), and staleness_decay

@@ -182,6 +182,41 @@ class FedConfig:
     # never changes numerics, only RoundLog.sim_finish_s (the axis on
     # which overlap beats sync, see benchmarks/async_rounds.py).
     straggler_factor: float = 4.0
+    # client-axis wave streaming (engine="cohort" only): the cohort engine
+    # host-stages every stacked (C, ...) pytree and runs each compiled
+    # phase wave_size clients at a time, freeing device buffers between
+    # waves — peak device memory is bounded by the wave, not by C. 0 (the
+    # default) keeps the whole client axis device-resident in one wave,
+    # bit-for-bit the historical path. Composes with num_devices (each
+    # wave is padded to a mesh multiple and sharded).
+    wave_size: int = 0
+    # two-tier hierarchical server (repro.fed.server): E edge aggregators
+    # each own a contiguous client shard, apply the server-side filter and
+    # staleness bookkeeping locally (per-shard lazily materialized
+    # StalenessBuffer) and hand the root E partial sums to fuse — root
+    # work and in-flight report footprint scale with E, not C. 1 (the
+    # default) is the flat single-tier server, bit-for-bit the legacy
+    # aggregation and byte accounting.
+    num_edge_aggregators: int = 1
+    # trace-driven arrival processes (repro.fed.clock): how clients arrive
+    # at each round on the simulated timeline. "static" = everyone ready
+    # at the phase start (legacy); "poisson" = iid exponential delays with
+    # mean arrival_spread seconds; "bursty" = clients cluster into
+    # arrival_bursts spikes spread over arrival_spread seconds (a client's
+    # burst is stable in (seed, client) — think timezone waves). All draws
+    # are deterministic in (seed, round, client). Pure timeline accounting.
+    arrival_process: str = "static"
+    arrival_spread: float = 0.0
+    arrival_bursts: int = 4
+    # per-round churn: each client is offline for the whole round with
+    # probability churn_prob (deterministic in (seed, round, client));
+    # offline clients are removed from the participant set and drain
+    # through the staleness machinery like sampled-out clients. 0 = never.
+    churn_prob: float = 0.0
+    # mid-round dropout: a participating client trains but drops before
+    # reporting with probability dropout_prob — its fresh report never
+    # reaches the server, so its row rides the staleness buffer. 0 = never.
+    dropout_prob: float = 0.0
     # kernel backend for the round hot paths (repro.kernels.dispatch):
     # "auto" = Pallas kernels on TPU, jnp reference elsewhere (also honors
     # the REPRO_KERNEL_BACKEND env var / kernel_backend() context manager);

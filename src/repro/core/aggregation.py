@@ -57,6 +57,41 @@ def weighted_masked_mean_logits(logits, mask, client_weights, *,
     return teacher, valid
 
 
+def partial_masked_sums(logits, mask, client_weights=None):
+    """One edge aggregator's contribution to the masked (weighted) mean.
+
+    logits: (C_e, t, K) — this edge's client shard; mask: (C_e, t);
+    ``client_weights``: optional (C_e,) staleness weights (None = all fresh).
+    Returns ``(num (t, K), den (t,))`` — the weighted logit sums and weight
+    sums this shard contributes. ``fuse_partial_sums`` over every shard's
+    pair reproduces ``masked_mean_logits`` / ``weighted_masked_mean_logits``
+    on the full stack (the mean is a ratio of sums, so it fuses exactly;
+    only float summation order differs across shardings).
+    """
+    w = mask.astype(jnp.float32)
+    if client_weights is not None:
+        w = w * client_weights[:, None]
+    num = jnp.sum(logits.astype(jnp.float32) * w[..., None], axis=0)
+    return num, jnp.sum(w, axis=0)
+
+
+def fuse_partial_sums(nums, dens, *,
+                      temperature_sharpen: Optional[float] = None):
+    """Root fusion of E edge partials: (E, t, K) nums + (E, t) dens ->
+    (teacher (t, K), valid (t,)). The divisor is the summed weight itself
+    (floored to a dummy 1 only where it is exactly 0, matching
+    ``weighted_masked_mean_logits``; with integer counts this equals the
+    unweighted ``max(cnt, 1)`` floor)."""
+    s = jnp.sum(jnp.asarray(nums, jnp.float32), axis=0)      # (t, K)
+    den = jnp.sum(jnp.asarray(dens, jnp.float32), axis=0)    # (t,)
+    teacher = s / jnp.where(den > 0.0, den, 1.0)[..., None]
+    valid = den > 0.0
+    if temperature_sharpen:
+        probs = jax.nn.softmax(teacher / temperature_sharpen, axis=-1)
+        teacher = jnp.log(jnp.maximum(probs, 1e-12))         # sharpened logits
+    return teacher, valid
+
+
 def masked_mean_logits_psum(local_logits, local_mask, axis_name: str = "data"):
     """Collective form for the sharded FD runtime: each mesh rank holds one
     client's logits; the masked mean is one all-reduce (psum of (Σ m·y, Σ m))

@@ -213,13 +213,22 @@ class LoopEngine:
 
 
 def as_engine(clients_or_engine, engine: str = "loop", *,
-              num_devices: int = 0, mesh_axis: str = "clients"):
+              num_devices: int = 0, mesh_axis: str = "clients",
+              wave_size: int = 0):
     """Coerce a plain client list (the historical API) into an engine.
 
     ``num_devices``/``mesh_axis`` build the cohort engine's 1-D client mesh
     (``repro.fed.mesh``): 0 = unsharded, -1 = all devices, N > 0 = exactly N.
+    ``wave_size`` streams the cohort client axis through the device in
+    fixed-size waves (``repro.fed.cohort``); 0 = whole axis resident.
     """
     if hasattr(clients_or_engine, "local_train_all"):
+        if wave_size and not getattr(clients_or_engine, "wave_size", 0):
+            warnings.warn(
+                f"wave_size={wave_size} requested but a pre-built engine "
+                "without wave streaming was supplied; it will run as "
+                "constructed — build it via simulator.build_engine(...) "
+                "or pass the raw client list to honor the config")
         if num_devices and getattr(clients_or_engine, "mesh", None) is None:
             # a pre-built engine runs as constructed; say so instead of
             # letting the config silently promise a mesh that isn't there
@@ -234,12 +243,16 @@ def as_engine(clients_or_engine, engine: str = "loop", *,
         from repro.fed.cohort import CohortEngine
         from repro.fed.mesh import build_client_mesh
         mesh = build_client_mesh(num_devices, mesh_axis)
-        return CohortEngine(clients_or_engine, mesh=mesh, mesh_axis=mesh_axis)
+        return CohortEngine(clients_or_engine, mesh=mesh, mesh_axis=mesh_axis,
+                            wave_size=wave_size)
     if engine != "loop":
         raise ValueError(f"unknown engine {engine!r}; known: loop, cohort")
     if num_devices:
         raise ValueError("num_devices requires engine='cohort' (the loop "
                          "engine drives one client at a time)")
+    if wave_size:
+        raise ValueError("wave_size requires engine='cohort' (the loop "
+                         "engine never stacks a client axis to stream)")
     return LoopEngine(clients_or_engine)
 
 
@@ -251,7 +264,8 @@ def engine_from_config(clients_or_engine, cfg: FedConfig):
     engine-relevant config field cannot be wired into one and not the
     others."""
     return as_engine(clients_or_engine, cfg.engine,
-                     num_devices=cfg.num_devices, mesh_axis=cfg.mesh_axis)
+                     num_devices=cfg.num_devices, mesh_axis=cfg.mesh_axis,
+                     wave_size=cfg.wave_size)
 
 
 # ---------------------------------------------------------------------------

@@ -44,6 +44,22 @@ jitted phases are pinned back to the client axis via the logical-rules
 machinery in ``repro.models.sharding`` (logical axis ``"clients"``), so
 params/opt-state never decay to a single device between rounds.
 
+Wave streaming
+--------------
+``wave_size > 0`` bounds *peak device memory by the wave, not by C*: the
+cohort host-stages every stacked ``(C, ...)`` array (data, params,
+opt-state, filter state) as numpy and runs each compiled phase
+``wave_size`` clients at a time — rows ``[lo, hi)`` are staged onto the
+device (padded to the wave's mesh-divisible ``c_pad`` with the same
+validity-gated dummy lanes used everywhere else), the phase runs, results
+stream back to the host arrays, and the device buffers are dropped before
+the next wave. Every jitted phase is built once with the *wave* as its
+leading axis, so shapes never change across waves, rounds, or
+participation subsets — zero retraces (guarded in
+``tests/test_scale.py``). Per-client math is lane-independent, so waved
+results match the single-wave path; ``wave_size = 0`` (default) or
+``wave_size >= C`` keeps the historical device-resident path bit-for-bit.
+
 Partial participation
 ---------------------
 Every round phase accepts a per-round participation mask
@@ -93,14 +109,23 @@ class _Cohort:
     """One homogeneous architecture group: stacked state + jitted round ops."""
 
     def __init__(self, members: Sequence[Client], positions: Sequence[int],
-                 mesh=None, mesh_axis: str = DEFAULT_CLIENT_AXIS):
+                 mesh=None, mesh_axis: str = DEFAULT_CLIENT_AXIS,
+                 wave_size: int = 0):
         self.members = list(members)
         self.positions = list(positions)     # index into the global client list
         self.mesh = mesh
         self.mesh_axis = mesh_axis
-        # client axis after padding to a multiple of the mesh size; rows
-        # [len(members):c_pad] are validity-gated dummy clients
-        self.c_pad = padded_size(len(members), mesh)
+        if wave_size < 0:
+            raise ValueError(f"wave_size must be >= 0, got {wave_size!r}")
+        # wave streaming kicks in only when it would actually split the
+        # cohort; a wave covering everyone IS the legacy single-wave path
+        self._waved = 0 < wave_size < len(self.members)
+        self.wave_size = wave_size if self._waved else len(self.members)
+        # client axis of the *device-resident* stack after padding to a
+        # multiple of the mesh size: the whole cohort in legacy mode, one
+        # wave in streaming mode. Rows past the live members are
+        # validity-gated dummy clients either way.
+        self.c_pad = padded_size(self.wave_size, mesh)
         c0 = members[0]
         # arch_key only contracts identical (init, apply) structure; the
         # training hyperparameters below are baked into the cohort's jitted
@@ -150,25 +175,42 @@ class _Cohort:
 
         self.n = np.array([len(c.y) for c in members], np.int64)
         n_max = int(self.n.max())
-        x_pad = np.zeros((self.c_pad, n_max, *c0.x.shape[1:]),
+        lead = len(members) if self._waved else self.c_pad
+        x_pad = np.zeros((lead, n_max, *c0.x.shape[1:]),
                          np.asarray(c0.x).dtype)
-        y_pad = np.zeros((self.c_pad, n_max), np.asarray(c0.y).dtype)
-        m_pad = np.zeros((self.c_pad, n_max), np.float32)
+        y_pad = np.zeros((lead, n_max), np.asarray(c0.y).dtype)
+        m_pad = np.zeros((lead, n_max), np.float32)
         for i, c in enumerate(members):
             x_pad[i, : self.n[i]] = c.x
             y_pad[i, : self.n[i]] = c.y
             m_pad[i, : self.n[i]] = 1.0
-        self.x = self._put_c(x_pad)
-        self.y = self._put_c(y_pad)
-        self.sample_mask = self._put_c(m_pad)
+        if self._waved:
+            # streaming mode: the master copies live on host; each phase
+            # stages wave_size rows at a time (see ``_stage``/``_waves``)
+            self._hx, self._hy, self._hm = x_pad, y_pad, m_pad
+            # stack in numpy — the full (C, ...) params/opt stack must
+            # never touch the device, that's the whole point
+            def _np_stack(*leaves):
+                return np.stack([np.asarray(l) for l in leaves])
+            self._hparams = jax.tree.map(_np_stack,
+                                         *[c.params for c in members])
+            self._hopt = jax.tree.map(_np_stack,
+                                      *[c.opt_state for c in members])
+            self.x = self.y = self.sample_mask = None
+            self.params = self.opt_state = None
+        else:
+            self.x = self._put_c(x_pad)
+            self.y = self._put_c(y_pad)
+            self.sample_mask = self._put_c(m_pad)
 
-        # dummy rows clone member 0's state; their steps never validate, so
-        # the clone is inert ballast that keeps the client axis mesh-divisible
-        stand_ins = [members[0]] * (self.c_pad - len(members))
-        self.params = self._put_c(
-            _stack_trees([c.params for c in [*members, *stand_ins]]))
-        self.opt_state = self._put_c(
-            _stack_trees([c.opt_state for c in [*members, *stand_ins]]))
+            # dummy rows clone member 0's state; their steps never validate,
+            # so the clone is inert ballast that keeps the client axis
+            # mesh-divisible
+            stand_ins = [members[0]] * (self.c_pad - len(members))
+            self.params = self._put_c(
+                _stack_trees([c.params for c in [*members, *stand_ins]]))
+            self.opt_state = self._put_c(
+                _stack_trees([c.opt_state for c in [*members, *stand_ins]]))
 
         # filter state (filled by learn_dres, or packed right away when the
         # clients arrive with already-learned DREs — e.g. the transient
@@ -204,6 +246,51 @@ class _Cohort:
         else:
             pad = jnp.full((extra, *arr.shape[1:]), fill, arr.dtype)
         return jnp.concatenate([arr, pad])
+
+    # ----------------------------------------------------- wave streaming
+    def _waves(self):
+        """Yield the ``[lo, hi)`` member ranges of each wave (one full-range
+        wave in legacy mode — callers never branch on ``_waved``)."""
+        c = len(self.members)
+        for lo in range(0, c, self.wave_size):
+            yield lo, min(lo + self.wave_size, c)
+
+    def _stage(self, arr, lo: int, hi: int, fill=0):
+        """Stage host rows ``[lo, hi)`` as a ``(c_pad, ...)`` device-ready
+        array. Rows past ``hi - lo`` are dummy lanes: ``fill`` is a pad
+        value (0 for data/plans, sentinels like -1/1.0/1e6 where a dummy
+        row feeds a divide or an RBF kernel), or ``None`` to repeat row
+        ``lo`` (params/opt-state ballast, values never read back)."""
+        arr = np.asarray(arr)
+        n = hi - lo
+        if n == self.c_pad:
+            return arr[lo:hi]
+        if fill is None:
+            pad = np.repeat(arr[lo:lo + 1], self.c_pad - n, axis=0)
+            return np.concatenate([arr[lo:hi], pad])
+        out = np.full((self.c_pad, *arr.shape[1:]), fill, arr.dtype)
+        out[:n] = arr[lo:hi]
+        return out
+
+    def _stage_state(self, lo: int, hi: int):
+        """One wave's params/opt-state, staged host -> device."""
+        pd = self._put_c(jax.tree.map(
+            lambda leaf: self._stage(leaf, lo, hi, fill=None), self._hparams))
+        od = self._put_c(jax.tree.map(
+            lambda leaf: self._stage(leaf, lo, hi, fill=None), self._hopt))
+        return pd, od
+
+    def _write_state(self, params_dev, opt_dev, lo: int, hi: int) -> None:
+        """Stream one wave's updated params/opt-state back to the host
+        masters (dummy rows dropped); the device buffers die with their
+        last reference when the next wave stages."""
+        n = hi - lo
+        jax.tree.map(
+            lambda h, d: h.__setitem__(slice(lo, hi), np.asarray(d)[:n]),
+            self._hparams, params_dev)
+        jax.tree.map(
+            lambda h, d: h.__setitem__(slice(lo, hi), np.asarray(d)[:n]),
+            self._hopt, opt_dev)
 
     def _ctx(self):
         """Logical-rules scope for every jitted call: inside it the logical
@@ -373,29 +460,48 @@ class _Cohort:
                        and len({d.max_iter for d in dres}) == 1
                        and len(fit_backends) == 1)
             if uniform:
-                # the vmapped learn path: every filter fit in one call,
-                # device-parallel over the (padded) client axis; dummy rows
-                # fit on all-zero features and are never read back
+                # the vmapped learn path: every filter fit in one call per
+                # wave, device-parallel over the (padded) client axis;
+                # dummy rows fit on all-zero features and are never read
+                # back. The fit is per-client math, so waving it changes
+                # nothing but peak memory.
                 k = ks.pop()
-                feats = self.x.reshape(self.c_pad, int(self.n[0]), -1)
-                with self._ctx():
-                    res = kmeans_fit_batched(
-                        self._put_c(self._pad_rows(jnp.stack(keys))),
-                        feats, k, dres[0].max_iter,
-                        backend=fit_backends.pop())
-                    if dres[0].threshold is None:
-                        dmin = jax.vmap(min_dist_to_centroids)(feats,
-                                                               res.centroids)
-                        thrs = jnp.quantile(dmin, dres[0].calibration_q,
-                                            axis=1)
+                backend = fit_backends.pop()
+                keys_h = np.stack([np.asarray(kk) for kk in keys])
+                n0 = int(self.n[0])
+                C = len(self.members)
+                cents_host = None
+                thrs_host = np.zeros((C,), np.float32)
+                for lo, hi in self._waves():
+                    if self._waved:
+                        feats = self._put_c(self._stage(
+                            self._hx.reshape(C, n0, -1), lo, hi))
+                        keys_w = self._put_c(self._stage(keys_h, lo, hi,
+                                                         fill=None))
                     else:
-                        thrs = jnp.full((self.c_pad,), dres[0].threshold)
-                # pull centroids/thresholds to host in one gather each:
-                # rows of a mesh-sharded fit live on different devices, and
-                # jnp.stack in the packing step rejects mixed committed
-                # devices (one np.asarray, not C per-scalar float() syncs)
-                cents_host = np.asarray(res.centroids)
-                thrs_host = np.asarray(thrs)
+                        feats = self.x.reshape(self.c_pad, n0, -1)
+                        keys_w = self._put_c(self._pad_rows(jnp.stack(keys)))
+                    with self._ctx():
+                        res = kmeans_fit_batched(keys_w, feats, k,
+                                                 dres[0].max_iter,
+                                                 backend=backend)
+                        if dres[0].threshold is None:
+                            dmin = jax.vmap(min_dist_to_centroids)(
+                                feats, res.centroids)
+                            thrs = jnp.quantile(dmin, dres[0].calibration_q,
+                                                axis=1)
+                        else:
+                            thrs = jnp.full((self.c_pad,), dres[0].threshold)
+                    # pull centroids/thresholds to host in one gather each:
+                    # rows of a mesh-sharded fit live on different devices,
+                    # and jnp.stack in the packing step rejects mixed
+                    # committed devices (one np.asarray, not C per-scalar
+                    # float() syncs)
+                    cw = np.asarray(res.centroids)[: hi - lo]
+                    if cents_host is None:
+                        cents_host = np.zeros((C, *cw.shape[1:]), cw.dtype)
+                    cents_host[lo:hi] = cw
+                    thrs_host[lo:hi] = np.asarray(thrs)[: hi - lo]
                 for i, c in enumerate(self.members):
                     c.dre = dataclasses.replace(
                         c.dre, centroids=jnp.asarray(cents_host[i]),
@@ -413,23 +519,33 @@ class _Cohort:
         self._pack_filter_state()
 
     def _pack_filter_state(self) -> None:
-        """Stack the members' *learned* DREs into vmappable filter state."""
+        """Stack the members' *learned* DREs into vmappable filter state.
+
+        Legacy mode parks the stacked state on device (padded to
+        ``c_pad``); waved mode keeps it host-side numpy with the full
+        member axis and ``filter_masks`` stages one wave at a time."""
         dres = [c.dre for c in self.members]
         if all(isinstance(d, KMeansDRE) for d in dres):
             kmax = max(c.dre.centroids.shape[0] for c in self.members)
             cents = []
             for c in self.members:
-                cc = jnp.asarray(c.dre.centroids)
+                cc = np.asarray(c.dre.centroids)
                 if cc.shape[0] < kmax:  # pad by repeating the first centroid:
-                    pad = jnp.tile(cc[:1], (kmax - cc.shape[0], 1))
-                    cc = jnp.concatenate([cc, pad])  # min-distance unchanged
+                    pad = np.tile(cc[:1], (kmax - cc.shape[0], 1))
+                    cc = np.concatenate([cc, pad])  # min-distance unchanged
                 cents.append(cc)
+            thrs = np.asarray([c.dre.threshold for c in self.members],
+                              np.float32)
             self.filter_kind = "kmeans"
+            if self._waved:
+                self._filter_state = {"centroids": np.stack(cents),
+                                      "thresholds": thrs}
+                return
             self._filter_state = {
-                "centroids": self._put_c(self._pad_rows(jnp.stack(cents))),
+                "centroids": self._put_c(self._pad_rows(
+                    jnp.stack([jnp.asarray(cc) for cc in cents]))),
                 "thresholds": self._put_c(self._pad_rows(
-                    jnp.asarray([c.dre.threshold for c in self.members],
-                                jnp.float32))),
+                    jnp.asarray(thrs))),
             }
         elif all(isinstance(d, KuLSIFDRE) for d in dres):
             self._check_kulsif_uniform(dres)
@@ -440,7 +556,8 @@ class _Cohort:
             # dummy-client rows are entirely sentinel for the same reason.
             # The underflow needs (1e6)^2/(2 sigma^2) >> 88 (float32), so
             # refuse sigmas anywhere near that scale when padding exists
-            padded = (self.c_pad > len(self.members)
+            # (waved cohorts always pad: the last wave is rarely full)
+            padded = (self._waved or self.c_pad > len(self.members)
                       or int(self.n.min()) < n_max)
             if padded and dres[0].sigma > 1e4:
                 raise ValueError(
@@ -449,10 +566,25 @@ class _Cohort:
                     f"sigma={dres[0].sigma!r} with a padded cohort — use "
                     "equal private-set sizes and a mesh-divisible client "
                     "count, or give such clients distinct arch_keys")
-            priv = np.full((self.c_pad, n_max, d), 1e6, np.float32)
+            lead = len(self.members) if self._waved else self.c_pad
+            priv = np.full((lead, n_max, d), 1e6, np.float32)
             for i, c in enumerate(self.members):
                 priv[i, : self.n[i]] = np.asarray(c.dre.private)
             self.filter_kind = "kulsif"
+            if self._waved:
+                self._filter_state = {
+                    "alpha": np.stack([np.asarray(c.dre.alpha)
+                                       for c in self.members]),
+                    "aux": np.stack([np.asarray(c.dre.aux)
+                                     for c in self.members]),
+                    "private": priv,
+                    "n": np.asarray(self.n, np.float32),
+                    "thresholds": np.asarray(
+                        [c.dre.threshold for c in self.members], np.float32),
+                    "sigma": float(dres[0].sigma),
+                    "lam": float(dres[0].lam),
+                }
+                return
             self._filter_state = {
                 "alpha": self._put_c(self._pad_rows(
                     jnp.stack([jnp.asarray(c.dre.alpha)
@@ -518,11 +650,14 @@ class _Cohort:
         else:
             ns = [int(v) for v in self.n]
         steps = max(steps_per_epoch(n, batch_size) for n in ns) * epochs
-        # dummy-client rows [C:c_pad] stay all-zero / valid=False: every one
-        # of their steps is a no-op under the _where_tree gating
-        idx = np.zeros((self.c_pad, steps, batch_size), np.int32)
-        w = np.zeros((self.c_pad, steps, batch_size), np.float32)
-        valid = np.zeros((self.c_pad, steps), bool)
+        # dummy-client rows [C:lead] stay all-zero / valid=False: every one
+        # of their steps is a no-op under the _where_tree gating (waved
+        # mode plans the full member axis and stages per wave, so rng
+        # draws happen exactly once per member regardless of wave count)
+        lead = C if self._waved else self.c_pad
+        idx = np.zeros((lead, steps, batch_size), np.int32)
+        w = np.zeros((lead, steps, batch_size), np.float32)
+        valid = np.zeros((lead, steps), bool)
         for i, c in enumerate(self.members):
             if part is not None and not part[i]:
                 continue               # no-op lane this round
@@ -542,42 +677,105 @@ class _Cohort:
     def local_train(self, epochs: int, batch_size: int,
                     part=None) -> List[float]:
         idx, w, valid = self._plan(-1, epochs, batch_size, part=part)
-        with self._ctx():
-            self.params, self.opt_state, losses = self._train(
-                self.params, self.opt_state, self.x, self.y,
-                self._put_c(idx), self._put_c(w), self._put_c(valid))
         C = len(self.members)
-        return self._mean_losses(np.asarray(losses)[:C], valid[:C])
+        if not self._waved:
+            with self._ctx():
+                self.params, self.opt_state, losses = self._train(
+                    self.params, self.opt_state, self.x, self.y,
+                    self._put_c(idx), self._put_c(w), self._put_c(valid))
+            return self._mean_losses(np.asarray(losses)[:C], valid[:C])
+        losses_h = np.zeros((C, valid.shape[1]), np.float32)
+        for lo, hi in self._waves():
+            pd, od = self._stage_state(lo, hi)
+            with self._ctx():
+                pd, od, losses = self._train(
+                    pd, od,
+                    self._put_c(self._stage(self._hx, lo, hi)),
+                    self._put_c(self._stage(self._hy, lo, hi)),
+                    self._put_c(self._stage(idx, lo, hi)),
+                    self._put_c(self._stage(w, lo, hi)),
+                    self._put_c(self._stage(valid, lo, hi)))
+            self._write_state(pd, od, lo, hi)
+            losses_h[lo:hi] = np.asarray(losses)[: hi - lo]
+        return self._mean_losses(losses_h, valid[:C])
 
     def distill(self, px, teacher, weight, epochs: int,
                 batch_size: int, part=None) -> List[float]:
         idx, w, valid = self._plan(len(px), epochs, batch_size, weight=weight,
                                    part=part)
-        with self._ctx():
-            self.params, self.opt_state, losses = self._distill(
-                self.params, self.opt_state,
-                self._put_rep(px), self._put_rep(teacher),
-                self._put_c(idx), self._put_c(w), self._put_c(valid))
         C = len(self.members)
-        return self._mean_losses(np.asarray(losses)[:C], valid[:C])
+        if not self._waved:
+            with self._ctx():
+                self.params, self.opt_state, losses = self._distill(
+                    self.params, self.opt_state,
+                    self._put_rep(px), self._put_rep(teacher),
+                    self._put_c(idx), self._put_c(w), self._put_c(valid))
+            return self._mean_losses(np.asarray(losses)[:C], valid[:C])
+        pxd, td = self._put_rep(px), self._put_rep(teacher)  # shared by waves
+        losses_h = np.zeros((C, valid.shape[1]), np.float32)
+        for lo, hi in self._waves():
+            pd, od = self._stage_state(lo, hi)
+            with self._ctx():
+                pd, od, losses = self._distill(
+                    pd, od, pxd, td,
+                    self._put_c(self._stage(idx, lo, hi)),
+                    self._put_c(self._stage(w, lo, hi)),
+                    self._put_c(self._stage(valid, lo, hi)))
+            self._write_state(pd, od, lo, hi)
+            losses_h[lo:hi] = np.asarray(losses)[: hi - lo]
+        return self._mean_losses(losses_h, valid[:C])
 
     def distill_private(self, teacher_by_class, valid_by_class, epochs: int,
                         batch_size: int, part=None) -> List[float]:
         idx, w, valid = self._plan(-1, epochs, batch_size, part=part)
-        with self._ctx():
-            self.params, self.opt_state, losses = self._distill_private(
-                self.params, self.opt_state, self.x, self.y,
-                self._put_rep(teacher_by_class),
-                self._put_rep(np.asarray(valid_by_class, np.float32)),
-                self._put_c(idx), self._put_c(w), self._put_c(valid))
         C = len(self.members)
-        return self._mean_losses(np.asarray(losses)[:C], valid[:C])
+        if not self._waved:
+            with self._ctx():
+                self.params, self.opt_state, losses = self._distill_private(
+                    self.params, self.opt_state, self.x, self.y,
+                    self._put_rep(teacher_by_class),
+                    self._put_rep(np.asarray(valid_by_class, np.float32)),
+                    self._put_c(idx), self._put_c(w), self._put_c(valid))
+            return self._mean_losses(np.asarray(losses)[:C], valid[:C])
+        td = self._put_rep(teacher_by_class)
+        vd = self._put_rep(np.asarray(valid_by_class, np.float32))
+        losses_h = np.zeros((C, valid.shape[1]), np.float32)
+        for lo, hi in self._waves():
+            pd, od = self._stage_state(lo, hi)
+            with self._ctx():
+                pd, od, losses = self._distill_private(
+                    pd, od,
+                    self._put_c(self._stage(self._hx, lo, hi)),
+                    self._put_c(self._stage(self._hy, lo, hi)),
+                    td, vd,
+                    self._put_c(self._stage(idx, lo, hi)),
+                    self._put_c(self._stage(w, lo, hi)),
+                    self._put_c(self._stage(valid, lo, hi)))
+            self._write_state(pd, od, lo, hi)
+            losses_h[lo:hi] = np.asarray(losses)[: hi - lo]
+        return self._mean_losses(losses_h, valid[:C])
 
     def classwise_means(self, part=None):
-        with self._ctx():
-            means, counts = self._classwise(self.params, self.x, self.y,
-                                            self.sample_mask)
-        means, counts = np.asarray(means), np.asarray(counts)
+        if not self._waved:
+            with self._ctx():
+                means, counts = self._classwise(self.params, self.x, self.y,
+                                                self.sample_mask)
+            means, counts = np.asarray(means), np.asarray(counts)
+        else:
+            C = len(self.members)
+            means = np.zeros((C, self.num_classes, self.num_classes),
+                             np.float32)
+            counts = np.zeros((C, self.num_classes), np.float32)
+            for lo, hi in self._waves():
+                pd, _ = self._stage_state(lo, hi)
+                with self._ctx():
+                    m_w, c_w = self._classwise(
+                        pd,
+                        self._put_c(self._stage(self._hx, lo, hi)),
+                        self._put_c(self._stage(self._hy, lo, hi)),
+                        self._put_c(self._stage(self._hm, lo, hi)))
+                means[lo:hi] = np.asarray(m_w)[: hi - lo]
+                counts[lo:hi] = np.asarray(c_w)[: hi - lo]
         if part is not None:
             # sampled-out members report nothing (zero counts drop them
             # from the classwise fuse exactly like the loop engine's skip)
@@ -587,9 +785,19 @@ class _Cohort:
         return [(means[i], counts[i]) for i in range(len(self.members))]
 
     def proxy_logits(self, px, part=None) -> np.ndarray:
-        with self._ctx():
-            out = self._predict(self.params, self._put_rep(px))
-        out = np.asarray(out)[: len(self.members)]
+        if not self._waved:
+            with self._ctx():
+                out = self._predict(self.params, self._put_rep(px))
+            out = np.asarray(out)[: len(self.members)]
+        else:
+            C = len(self.members)
+            pxd = self._put_rep(px)
+            out = np.zeros((C, len(px), self.num_classes), np.float32)
+            for lo, hi in self._waves():
+                pd, _ = self._stage_state(lo, hi)
+                with self._ctx():
+                    o_w = self._predict(pd, pxd)
+                out[lo:hi] = np.asarray(o_w)[: hi - lo]
         if part is not None:
             out = out.copy()
             out[~np.asarray(part, bool)] = 0.0
@@ -622,20 +830,51 @@ class _Cohort:
                 for i, c in enumerate(self.members)])
         pxf = self._put_rep(np.asarray(px).reshape(t, -1))
         owner = self._put_rep(powner)
-        # dummy rows get cid -1 (never an owner), their masks are sliced off
-        cids = self._put_c(self._pad_rows(
-            jnp.asarray([c.cid for c in self.members]), fill=-1))
         st = self._filter_state
-        with self._ctx():
-            if self.filter_kind == "kmeans":
-                masks = self._kmeans_masks(st["centroids"], st["thresholds"],
-                                           cids, pxf, owner)
-            else:
-                masks = self._kulsif_masks(st["alpha"], st["aux"],
-                                           st["private"], st["n"],
-                                           st["thresholds"], cids,
-                                           st["sigma"], st["lam"], pxf, owner)
-        return gated(np.asarray(masks)[: len(self.members)])
+        if not self._waved:
+            # dummy rows get cid -1 (never an owner), masks are sliced off
+            cids = self._put_c(self._pad_rows(
+                jnp.asarray([c.cid for c in self.members]), fill=-1))
+            with self._ctx():
+                if self.filter_kind == "kmeans":
+                    masks = self._kmeans_masks(st["centroids"],
+                                               st["thresholds"],
+                                               cids, pxf, owner)
+                else:
+                    masks = self._kulsif_masks(st["alpha"], st["aux"],
+                                               st["private"], st["n"],
+                                               st["thresholds"], cids,
+                                               st["sigma"], st["lam"],
+                                               pxf, owner)
+            return gated(np.asarray(masks)[: len(self.members)])
+        # waved: filter state lives host-side, staged one wave at a time.
+        # Pad fills keep dummy lanes inert where they feed real math: cid
+        # -1 never owns, kulsif n=1.0 never divides by zero, private rows
+        # ride the existing 1e6 far-away sentinel.
+        C = len(self.members)
+        cids_h = np.asarray([c.cid for c in self.members])
+        out = np.zeros((C, t), bool)
+        for lo, hi in self._waves():
+            cids = self._put_c(self._stage(cids_h, lo, hi, fill=-1))
+            with self._ctx():
+                if self.filter_kind == "kmeans":
+                    masks = self._kmeans_masks(
+                        self._put_c(self._stage(st["centroids"], lo, hi)),
+                        self._put_c(self._stage(st["thresholds"], lo, hi)),
+                        cids, pxf, owner)
+                else:
+                    masks = self._kulsif_masks(
+                        self._put_c(self._stage(st["alpha"], lo, hi)),
+                        self._put_c(self._stage(st["aux"], lo, hi)),
+                        self._put_c(self._stage(st["private"], lo, hi,
+                                                fill=np.float32(1e6))),
+                        self._put_c(self._stage(st["n"], lo, hi,
+                                                fill=np.float32(1.0))),
+                        self._put_c(self._stage(st["thresholds"], lo, hi)),
+                        cids, jnp.float32(st["sigma"]),
+                        jnp.float32(st["lam"]), pxf, owner)
+            out[lo:hi] = np.asarray(masks)[: hi - lo]
+        return gated(out)
 
     def evaluate(self, x_test, y_test, batch_size: int = 512) -> List[float]:
         """Masked fixed-shape eval: the tail batch is padded to ``batch_size``
@@ -652,16 +891,33 @@ class _Cohort:
             y = np.concatenate([y, np.zeros((pad,), y.dtype)])
         m = np.zeros((nb * batch_size,), np.int32)
         m[:n] = 1
-        with self._ctx():
-            correct = self._eval(
-                self.params,
-                self._put_rep(x.reshape(nb, batch_size, *x.shape[1:])),
-                self._put_rep(y.reshape(nb, batch_size)),
-                self._put_rep(m.reshape(nb, batch_size)))
-        return [int(c) / n for c in np.asarray(correct)[: len(self.members)]]
+        xb = self._put_rep(x.reshape(nb, batch_size, *x.shape[1:]))
+        yb = self._put_rep(y.reshape(nb, batch_size))
+        mb = self._put_rep(m.reshape(nb, batch_size))
+        if not self._waved:
+            with self._ctx():
+                correct = self._eval(self.params, xb, yb, mb)
+            return [int(c) / n
+                    for c in np.asarray(correct)[: len(self.members)]]
+        C = len(self.members)
+        correct = np.zeros((C,), np.int64)
+        for lo, hi in self._waves():
+            pd, _ = self._stage_state(lo, hi)
+            with self._ctx():
+                c_w = self._eval(pd, xb, yb, mb)
+            correct[lo:hi] = np.asarray(c_w)[: hi - lo]
+        return [int(c) / n for c in correct]
 
     def sync_to_clients(self) -> None:
         """Write stacked params/opt-state back onto the Client objects."""
+        if self._waved:
+            # the masters already live on host — hand back per-client views
+            for i, c in enumerate(self.members):
+                c.params = jax.tree.map(lambda l: jnp.asarray(l[i]),
+                                        self._hparams)
+                c.opt_state = jax.tree.map(lambda l: jnp.asarray(l[i]),
+                                           self._hopt)
+            return
         params, opt_state = self.params, self.opt_state
         if self.mesh is not None:
             # gather through host first: rows of a mesh-sharded stack live on
@@ -687,20 +943,27 @@ class CohortEngine:
     client axis across a 1-D device mesh; ``None`` keeps the single-device
     semantics. Each cohort pads its own client axis to a mesh-size multiple
     with validity-gated dummy clients, so any population shape works.
+
+    ``wave_size`` streams each cohort's client axis through the device in
+    fixed-size waves (see the module docstring); 0 keeps the whole axis
+    device-resident. Composes with ``mesh`` — each wave is padded to a
+    mesh multiple and sharded.
     """
 
     def __init__(self, clients: Sequence[Client], mesh=None,
-                 mesh_axis: str = DEFAULT_CLIENT_AXIS):
+                 mesh_axis: str = DEFAULT_CLIENT_AXIS, wave_size: int = 0):
         self.clients = list(clients)
         self.mesh = mesh
         self.mesh_axis = mesh_axis
+        self.wave_size = wave_size
         groups: Dict[object, Tuple[List[Client], List[int]]] = {}
         for pos, c in enumerate(self.clients):
             key = c.arch_key if c.arch_key is not None else ("solo", pos)
             members, positions = groups.setdefault(key, ([], []))
             members.append(c)
             positions.append(pos)
-        self.cohorts = [_Cohort(m, p, mesh=mesh, mesh_axis=mesh_axis)
+        self.cohorts = [_Cohort(m, p, mesh=mesh, mesh_axis=mesh_axis,
+                                wave_size=wave_size)
                         for m, p in groups.values()]
 
     @property

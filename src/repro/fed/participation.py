@@ -64,7 +64,16 @@ def validate_config(cfg) -> None:
 
 
 def cohort_size(num_clients: int, fraction: float) -> int:
-    """Participants per round: round(fraction · C), clamped to [1, C]."""
+    """Participants per round: ``round(fraction · C)``, clamped to ``[1, C]``.
+
+    ``round`` is Python's banker's rounding, so exact half-integers go to
+    the nearest *even* count: ``fraction=0.5, C=5`` gives **2** (not 3),
+    ``C=7`` gives 4. This has been the behavior since partial
+    participation landed and every golden/round log encodes it, so it is
+    deliberately pinned (see ``tests/test_scale.py``) rather than
+    switched to half-up; pick fractions that don't straddle ``x.5`` if
+    the parity matters to you.
+    """
     return int(min(max(round(fraction * num_clients), 1), num_clients))
 
 
@@ -121,11 +130,19 @@ def sample_participants(round_idx: int, num_clients: int, fraction: float,
 
 
 class StaleMerge(NamedTuple):
-    """Result of ``StalenessBuffer.merge`` — inputs with stale rows filled."""
+    """Result of ``StalenessBuffer.merge`` — inputs with stale rows filled.
+
+    ``ages_sum``/``num_contributing`` are the unnormalized pieces of
+    ``mean_staleness`` (``mean = ages_sum / num_contributing``); the
+    two-tier server fuses them across edge shards so the root reports the
+    exact fleet-wide mean, not a mean of shard means.
+    """
     logits: np.ndarray          # (C, t, K) fresh or last-reported logits
     masks: np.ndarray           # (C, t) fresh or last-reported ID masks
     client_weights: np.ndarray  # (C,) staleness_decay ** age
     mean_staleness: float       # mean age over clients that ever reported
+    ages_sum: float = 0.0       # Σ age over contributing clients
+    num_contributing: int = 0   # clients whose report reaches the teacher
 
 
 class StalenessBuffer:
@@ -172,9 +189,12 @@ class StalenessBuffer:
         logits = np.asarray(logits, np.float32)
         masks = np.asarray(masks, bool)
         idx = np.asarray(idx)
-        for c in np.flatnonzero(part):
-            self.logits[c, idx] = logits[c]
-            self.masks[c, idx] = masks[c]
+        pids = np.flatnonzero(part)
+        if pids.size:
+            # one fancy-index write per array instead of an O(C) Python
+            # loop (bit-identical; the loop was the 16k-client hot spot)
+            self.logits[pids[:, None], idx[None, :]] = logits[pids]
+            self.masks[pids[:, None], idx[None, :]] = masks[pids]
         self.reported[part] = True
         self.last_round[part] = round_idx
         if part.all():
@@ -182,7 +202,8 @@ class StalenessBuffer:
             # input arrays so fraction=1 reproduces the legacy logs
             # bit-for-bit
             return StaleMerge(logits, masks,
-                              np.ones((len(part),), np.float32), 0.0)
+                              np.ones((len(part),), np.float32), 0.0,
+                              0.0, int(len(part)))
         merged_logits = np.where(part[:, None, None], logits,
                                  self.logits[:, idx])
         merged_masks = np.where(part[:, None], masks, self.masks[:, idx])
@@ -195,7 +216,9 @@ class StalenessBuffer:
         # weight-zero report (decay=0 and stale, or never reported) is
         # dropped from the teacher, so its age must not inflate the metric
         contributing = self.reported & (weights > 0.0)
-        mean_age = (float(ages[contributing].mean())
-                    if contributing.any() else 0.0)
+        n_contrib = int(np.count_nonzero(contributing))
+        ages_sum = float(ages[contributing].sum()) if n_contrib else 0.0
+        mean_age = ages_sum / n_contrib if n_contrib else 0.0
         return StaleMerge(merged_logits, merged_masks,
-                          weights.astype(np.float32), mean_age)
+                          weights.astype(np.float32), mean_age,
+                          ages_sum, n_contrib)

@@ -59,7 +59,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.protocol import RoundLog
-from repro.fed.clock import SimTimeline, client_speeds
+from repro.fed.clock import (ARRIVAL_PROCESSES, SimTimeline, arrival_offsets,
+                             client_speeds, dropout_mask, online_mask)
 from repro.fed.participation import sample_participants
 
 ROUND_MODES = ("sync", "overlap")
@@ -107,6 +108,20 @@ def validate_config(cfg) -> None:
     if not 0.0 < f <= 1.0:
         raise ValueError(
             f"participation_fraction must be in (0, 1], got {f!r}")
+    if cfg.arrival_process not in ARRIVAL_PROCESSES:
+        raise ValueError(
+            f"unknown arrival_process {cfg.arrival_process!r}; known: "
+            + ", ".join(ARRIVAL_PROCESSES))
+    if cfg.arrival_spread < 0.0:
+        raise ValueError(
+            f"arrival_spread must be >= 0, got {cfg.arrival_spread!r}")
+    if cfg.arrival_bursts < 1:
+        raise ValueError(
+            f"arrival_bursts must be >= 1, got {cfg.arrival_bursts!r}")
+    for knob in ("churn_prob", "dropout_prob"):
+        v = getattr(cfg, knob)
+        if not 0.0 <= v < 1.0:
+            raise ValueError(f"{knob} must be in [0, 1), got {v!r}")
 
 
 def round_phases(method) -> Tuple[str, ...]:
@@ -285,9 +300,19 @@ class RoundScheduler:
                  else int(np.asarray(st.part, bool).sum()))
             # measured host seconds cover every participant back-to-back;
             # deployed clients run in parallel, each paying its own share
-            # scaled by its straggler speed
+            # scaled by its straggler speed. The arrival trace delays when
+            # each client shows up for the round — it gates local_train
+            # (the round's entry point); later phases inherit the skew
+            # through the per-client lane occupancy.
+            offsets = None
+            if phase == "local_train":
+                offsets = arrival_offsets(
+                    self.engine.num_clients, st.r, seed=self.cfg.seed,
+                    process=self.cfg.arrival_process,
+                    spread=self.cfg.arrival_spread,
+                    bursts=self.cfg.arrival_bursts)
             end = self.timeline.client_phase(st.part, base / max(n, 1),
-                                             ready_s)
+                                             ready_s, offsets=offsets)
         elif phase == "aggregate":
             end = self.timeline.server_phase(base, ready_s)
         else:  # eval: simulation-side measurement, free on the timeline
@@ -307,8 +332,16 @@ class RoundScheduler:
             st.part = sample_participants(
                 st.r, self.engine.num_clients, cfg.participation_fraction,
                 cfg.participation_policy, seed=cfg.seed, data_sizes=sizes)
+        # per-round churn: an offline client is removed from the round
+        # entirely — no training, no report — and drains through the
+        # staleness machinery exactly like a sampled-out client
+        online = online_mask(self.engine.num_clients, st.r, seed=cfg.seed,
+                             churn=cfg.churn_prob)
+        if online is not None:
+            st.part = online if st.part is None else (st.part & online)
+        if st.part is not None:
             # participants is passed as a kwarg only when a subset was
-            # actually sampled, so pre-existing engines with the historical
+            # actually drawn, so pre-existing engines with the historical
             # interface keep working at participation_fraction=1 (and the
             # legacy call sequence is preserved bit-for-bit)
             st.kw = {"participants": st.part}
@@ -317,6 +350,16 @@ class RoundScheduler:
 
     def _phase_report(self, st: _RoundState) -> None:
         cfg = self.cfg
+        # mid-round dropout: these clients trained (local_train already
+        # priced their lanes) but vanish before reporting — their fresh
+        # report never reaches the server and they sit out the rest of the
+        # round, riding the staleness buffer like any non-participant
+        dropped = dropout_mask(self.engine.num_clients, st.r, seed=cfg.seed,
+                               dropout=cfg.dropout_prob)
+        if dropped is not None:
+            stayed = (~dropped if st.part is None else (st.part & ~dropped))
+            st.part = stayed
+            st.kw = {"participants": st.part}
         if self.method.data_free:  # FKD/PLS upload class-wise means
             st.means_counts = self._classwise(**st.kw)
             return
@@ -327,9 +370,11 @@ class RoundScheduler:
         # ID fraction over the clients that actually reported; stale rows
         # merged at aggregation additionally carry reuse
         st.id_frac = (float(masks.mean()) if st.part is None
-                      else float(masks[st.part].mean()))
+                      else (float(masks[st.part].mean())
+                            if st.part.any() else 0.0))
         self.server.ingest_reports(st.r, st.part, st.idx, logits, masks,
-                                   decay=cfg.staleness_decay)
+                                   decay=cfg.staleness_decay,
+                                   entropy_filter=self.method.server_filter)
 
     def _phase_aggregate(self, st: _RoundState) -> None:
         if self.method.data_free:

@@ -8,10 +8,21 @@ from the ``StalenessBuffer`` at ingest time, while the buffer still
 reflects only earlier rounds — and ``aggregate_round`` later fuses the
 recorded reports into a teacher. Under the lockstep ``sync`` mode the two
 run back-to-back and reproduce the historical single-call path
-bit-for-bit."""
+bit-for-bit.
+
+With ``num_edges > 1`` the server is **two-tier**: E edge aggregators each
+own a contiguous client shard and, at ingest time, locally apply the
+server-side filter, run staleness bookkeeping against a *per-shard*
+lazily-materialized ``StalenessBuffer``, and reduce their shard to one
+``(num, den)`` masked/weighted partial sum (``repro.core.aggregation``).
+The root only ever sees E partials — its per-round work and the in-flight
+report footprint scale with E and the proxy batch, not with C, which is
+what lets ``benchmarks/scale.py`` push C to 16k on a laptop-class host.
+``num_edges=1`` (default) is the flat single-tier server, bit-for-bit the
+legacy aggregation and byte accounting."""
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional
+from typing import Dict, List, NamedTuple, Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -35,18 +46,50 @@ class _PendingReports(NamedTuple):
     merged: Optional[StaleMerge]         # stale-filled rows (subset rounds)
 
 
+class _PendingPartials(NamedTuple):
+    """One round's edge-reduced reports (``num_edges > 1`` only).
+
+    Each edge already collapsed its client shard to a masked/weighted
+    partial sum, so a pending round costs O(E · t · K) — the (C, t, K)
+    stack never outlives ``ingest_reports``."""
+    nums: np.ndarray        # (E, t, K) per-edge weighted logit sums
+    dens: np.ndarray        # (E, t) per-edge weight sums
+    uploaded_bytes: int     # upload traffic, priced from pre-filter masks
+    mean_staleness: float   # exact fleet-wide Σ age / Σ contributing
+
+
 class Server:
-    def __init__(self, proxy: ProxyData, *, seed: int = 0):
+    def __init__(self, proxy: ProxyData, *, seed: int = 0,
+                 num_edges: int = 1):
+        if num_edges < 1:
+            raise ValueError(f"num_edges must be >= 1, got {num_edges!r}")
         self.proxy = proxy
         self.rng = np.random.default_rng(seed + 7)
+        self.num_edges = int(num_edges)
         self.bytes_received = 0
         self.bytes_broadcast = 0
         # lazily-sized staleness buffer (partial participation only): the
-        # last report of every client, by proxy-dataset position
+        # last report of every client, by proxy-dataset position.
+        # single-tier keeps one flat buffer; two-tier keeps one per edge
+        # shard (each materialized on that shard's first subset ingest)
         self._stale: Optional[StalenessBuffer] = None
+        self._edge_stale: List[Optional[StalenessBuffer]] = []
+        self._shard_slices: Optional[List[slice]] = None
         # rounds whose reports were ingested but not yet aggregated,
         # keyed by round index (overlap mode keeps up to max_inflight here)
-        self._pending: Dict[int, _PendingReports] = {}
+        self._pending: Dict[int, Union[_PendingReports,
+                                       _PendingPartials]] = {}
+
+    def _shards(self, num_clients: int) -> List[slice]:
+        """Contiguous per-edge client shards, fixed at first use."""
+        if self._shard_slices is None:
+            e = min(self.num_edges, num_clients)
+            bounds = np.linspace(0, num_clients, e + 1).astype(int)
+            self._shard_slices = [slice(int(a), int(b))
+                                  for a, b in zip(bounds[:-1], bounds[1:])
+                                  if b > a]
+            self._edge_stale = [None] * len(self._shard_slices)
+        return self._shard_slices
 
     def select_indices(self, batch: int) -> np.ndarray:
         return select_round_indices(self.rng, self.proxy, batch)
@@ -62,7 +105,8 @@ class Server:
                                  decay)
 
     def ingest_reports(self, round_idx: int, participants, idx, logits,
-                       masks, *, decay: float) -> None:
+                       masks, *, decay: float,
+                       entropy_filter: bool = False) -> None:
         """Record one round's engine reports for a later ``aggregate_round``.
 
         Stale rows are merged *now*: ingests arrive in round order (the
@@ -71,10 +115,20 @@ class Server:
         negative — even while later rounds' aggregations are still pending.
         ``participants=None`` (full participation) skips the buffer
         entirely, keeping the legacy everyone-reports path untouched.
+
+        ``entropy_filter`` matters only on the two-tier path (the edges
+        apply the Selective-FD server filter locally *before* reducing
+        their shard); single-tier ingests keep the raw reports and the
+        filter runs inside ``aggregate`` as it always has.
         """
         if round_idx in self._pending:
             raise ValueError(f"round {round_idx} reports already ingested "
                              "and not yet aggregated")
+        if self.num_edges > 1:
+            self._pending[round_idx] = self._ingest_edges(
+                round_idx, participants, idx, logits, masks, decay=decay,
+                entropy_filter=entropy_filter)
+            return
         if participants is None:
             self._pending[round_idx] = _PendingReports(
                 None, logits, masks, None)
@@ -83,6 +137,54 @@ class Server:
                                   masks, decay=decay)
         self._pending[round_idx] = _PendingReports(
             participants, None, None, merged)
+
+    def _ingest_edges(self, round_idx: int, participants, idx, logits,
+                      masks, *, decay: float,
+                      entropy_filter: bool) -> _PendingPartials:
+        """Two-tier ingest: every edge reduces its client shard to one
+        masked/weighted ``(num, den)`` partial, doing the server-side
+        filter and staleness bookkeeping shard-locally. The full (C, t, K)
+        stack is consumed here and never parked in ``_pending``."""
+        logits = np.asarray(logits, np.float32)
+        masks = np.asarray(masks, bool)
+        part = (None if participants is None
+                else np.asarray(participants, bool))
+        k = logits.shape[-1]
+        shards = self._shards(logits.shape[0])
+        nums, dens = [], []
+        uploaded_bytes = 0
+        ages_sum, n_contrib = 0.0, 0
+        subset = part is not None
+        for e, sl in enumerate(shards):
+            l_e, m_e = logits[sl], masks[sl]
+            cw = None
+            if part is None:
+                # everyone reported: uploads are the raw ID rows
+                uploaded_bytes += int(m_e.sum()) * k * 4
+            else:
+                # uploads priced from the *pre-filter* fresh masks of this
+                # round's reporters; stale reuse costs no bytes
+                uploaded_bytes += int(m_e[part[sl]].sum()) * k * 4
+                if self._edge_stale[e] is None:
+                    self._edge_stale[e] = StalenessBuffer(
+                        l_e.shape[0], len(self.proxy.x), k)
+                merged = self._edge_stale[e].merge(
+                    round_idx, part[sl], idx, l_e, m_e, decay)
+                l_e, m_e, cw = merged.logits, merged.masks, merged.client_weights
+                ages_sum += merged.ages_sum
+                n_contrib += merged.num_contributing
+            if entropy_filter:  # per-client-row filter — shard-local is exact
+                m_e = np.asarray(server_entropy_filter(
+                    jnp.asarray(l_e), jnp.asarray(m_e)))
+            num, den = aggregation.partial_masked_sums(
+                jnp.asarray(l_e), jnp.asarray(m_e),
+                None if cw is None else jnp.asarray(cw))
+            nums.append(np.asarray(num))
+            dens.append(np.asarray(den))
+        mean_staleness = (ages_sum / n_contrib
+                          if subset and n_contrib else 0.0)
+        return _PendingPartials(np.stack(nums), np.stack(dens),
+                                uploaded_bytes, mean_staleness)
 
     def aggregate_round(self, round_idx: int, *,
                         sharpen: Optional[float] = None,
@@ -98,6 +200,17 @@ class Server:
             raise ValueError(
                 f"no ingested reports for round {round_idx}; call "
                 "ingest_reports first") from None
+        if isinstance(p, _PendingPartials):
+            # two-tier root: fuse the E edge partials (the filter and
+            # staleness weights were already folded in at the edges)
+            teacher, valid = aggregation.fuse_partial_sums(
+                jnp.asarray(p.nums), jnp.asarray(p.dens),
+                temperature_sharpen=sharpen)
+            self.bytes_received += p.uploaded_bytes
+            self.bytes_broadcast += int(teacher.shape[0]) * int(
+                teacher.shape[-1]) * 4
+            return (np.asarray(teacher), np.asarray(valid),
+                    p.mean_staleness)
         if p.merged is None:
             teacher, valid = self.aggregate(p.logits, p.masks,
                                             sharpen=sharpen,
@@ -123,6 +236,11 @@ class Server:
         """
         logits = jnp.asarray(logits)
         masks = jnp.asarray(masks)
+        # clients uploaded the *pre-filter* ID rows — snapshot them before
+        # the server-side filter tightens the masks, so bytes_received
+        # prices what actually crossed the network (the filtered masks
+        # undercounted the Selective-FD baseline's uploads)
+        uploaded_masks = masks
         if entropy_filter:  # Selective-FD baseline's extra server stage
             masks = server_entropy_filter(logits, masks)
         cw = (None if client_weights is None
@@ -136,8 +254,8 @@ class Server:
         # accounting: clients upload only ID logits (mask-compressed), and
         # only the round's participants upload at all
         k = logits.shape[-1]
-        up = (masks if uploaded_rows is None
-              else masks[np.asarray(uploaded_rows, bool)])
+        up = (uploaded_masks if uploaded_rows is None
+              else uploaded_masks[np.asarray(uploaded_rows, bool)])
         self.bytes_received += int(jnp.sum(up)) * k * 4
         self.bytes_broadcast += int(teacher.shape[0]) * k * 4
         return np.asarray(teacher), np.asarray(valid)
@@ -149,6 +267,10 @@ class Server:
         ``uploaded_rows`` (C,) restricts the upload accounting to this
         round's participants (sampled-out clients hand in zero counts and
         upload nothing); ``None`` keeps the legacy everyone-uploads count.
+
+        With ``num_edges > 1`` each edge reduces its client shard's
+        classwise sums first and the root fuses E partials — a regrouped
+        sum, identical up to float ordering.
         """
         means = jnp.stack([m for m, _ in means_counts])     # (C, K_cls, K)
         counts = jnp.stack([c for _, c in means_counts])    # (C, K_cls)
@@ -156,9 +278,20 @@ class Server:
             w = counts[..., None]
         else:
             w = (counts > 0).astype(jnp.float32)[..., None]
-        teacher = jnp.sum(means * w, axis=0) / jnp.maximum(jnp.sum(w, axis=0), 1.0)
+        if self.num_edges > 1:
+            shards = self._shards(int(means.shape[0]))
+            num = sum(jnp.sum((means * w)[sl], axis=0) for sl in shards)
+            den = sum(jnp.sum(w[sl], axis=0) for sl in shards)
+        else:
+            num = jnp.sum(means * w, axis=0)
+            den = jnp.sum(w, axis=0)
+        teacher = num / jnp.maximum(den, 1.0)
         valid = jnp.sum(counts, axis=0) > 0
         reporting = (means.shape[0] if uploaded_rows is None
                      else int(np.asarray(uploaded_rows, bool).sum()))
         self.bytes_received += reporting * int(np.prod(means.shape[1:])) * 4
+        # the fused classwise teacher is broadcast to every client, exactly
+        # like the proxy-logit teacher in ``aggregate`` (this path used to
+        # report zero download traffic for FKD/PLS data-free rounds)
+        self.bytes_broadcast += int(np.prod(teacher.shape)) * 4
         return np.asarray(teacher), np.asarray(valid)

@@ -49,7 +49,8 @@ def build_experiment(cfg: FedConfig, dataset_name: str = "mnist_feat",
                              labels_per_client=cfg.labels_per_client,
                              seed=cfg.seed)
     proxy = build_proxy(clients_data, cfg.proxy_fraction, seed=cfg.seed)
-    server = Server(proxy, seed=cfg.seed)
+    server = Server(proxy, seed=cfg.seed,
+                    num_edges=cfg.num_edge_aggregators)
     method = get_method(cfg.method)
 
     image_mode = np.asarray(ds.x).ndim == 4

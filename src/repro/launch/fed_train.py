@@ -28,6 +28,44 @@ def main(argv=None):
                          "exactly N (CPU hosts: set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N). "
                          "Requires --engine cohort")
+    ap.add_argument("--wave-size", type=int, default=0,
+                    help="stream the cohort client axis through the device "
+                         "in fixed-size waves (fed/cohort.py): peak device "
+                         "memory is bounded by the wave, not the client "
+                         "count. 0 = whole axis device-resident (the "
+                         "historical path, bit-for-bit). Requires "
+                         "--engine cohort; composes with --devices")
+    ap.add_argument("--edge-aggregators", type=int, default=1,
+                    help="two-tier hierarchical server (fed/server.py): E "
+                         "edge aggregators each reduce a contiguous client "
+                         "shard (filter + staleness bookkeeping local) and "
+                         "the root fuses E partial sums — root work scales "
+                         "with E, not the client count. 1 = flat legacy "
+                         "server")
+    ap.add_argument("--arrival-process", default="static",
+                    choices=["static", "poisson", "bursty"],
+                    help="trace-driven client arrivals on the simulated "
+                         "timeline (repro.fed.clock): static = everyone at "
+                         "phase start (legacy); poisson = iid exponential "
+                         "delays (mean --arrival-spread s); bursty = "
+                         "clients cluster into --arrival-bursts spikes "
+                         "over --arrival-spread s. Deterministic in "
+                         "(seed, round, client); pure accounting")
+    ap.add_argument("--arrival-spread", type=float, default=0.0,
+                    help="arrival-trace time scale in simulated seconds "
+                         "(0 disables the trace)")
+    ap.add_argument("--arrival-bursts", type=int, default=4,
+                    help="bursty arrivals only: number of arrival spikes "
+                         "per round (a client's burst is stable in "
+                         "(seed, client) — think timezone waves)")
+    ap.add_argument("--churn", type=float, default=0.0,
+                    help="per-round whole-round churn probability: an "
+                         "offline client skips the round entirely and "
+                         "drains through the staleness machinery")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="mid-round dropout probability: a client trains "
+                         "but vanishes before reporting — its fresh report "
+                         "never reaches the server")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of clients sampled each round "
                          "(participation_fraction; 1.0 = every client "
@@ -94,6 +132,13 @@ def main(argv=None):
         seed=args.seed,
         engine=args.engine,
         num_devices=args.devices,
+        wave_size=args.wave_size,
+        num_edge_aggregators=args.edge_aggregators,
+        arrival_process=args.arrival_process,
+        arrival_spread=args.arrival_spread,
+        arrival_bursts=args.arrival_bursts,
+        churn_prob=args.churn,
+        dropout_prob=args.dropout,
         participation_fraction=args.participation,
         participation_policy=args.policy,
         staleness_decay=args.staleness_decay,
