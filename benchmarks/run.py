@@ -16,13 +16,15 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
-                    help="comma list: table3,fig2,table4,fig5,kernels,async")
+                    help="comma list: table3,fig2,table4,fig5,kernels,"
+                         "async,serve")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (async_rounds, fig2_dre_cost, fig5_sweeps,
-                            kernel_bench, table3_accuracy, table4_complexity)
+                            kernel_bench, serve_resume, table3_accuracy,
+                            table4_complexity)
 
     jobs = [
         # kernels records to the repo-root BENCH_kernels.json (micro +
@@ -31,6 +33,9 @@ def main(argv=None) -> None:
         # async records sync vs overlap round throughput under the
         # straggler clock to the repo-root BENCH_async.json
         ("async", lambda: async_rounds.run_and_save(quick=quick)),
+        # serve records the resumable service's checkpoint overhead per
+        # round + restore latency to the repo-root BENCH_serve.json
+        ("serve", lambda: serve_resume.run_and_save(quick=quick)),
         ("fig2", lambda: fig2_dre_cost.run(
             sizes=(256, 512, 1024) if quick else (256, 512, 1024, 2048, 4096))),
         ("table4", lambda: table4_complexity.run(quick=quick)),

@@ -79,6 +79,13 @@ cfg = FedConfig(
     round_mode="auto",
     max_inflight=2,
     straggler_factor=4.0,
+    # Report backpressure (repro.fed.server): max_pending_reports caps
+    # how many client reports the server holds in flight across pending
+    # rounds; reports are admitted in simulated-arrival order and
+    # overflow clients drain through the staleness buffer like dropouts
+    # (0 = unbounded, the legacy ingestion). The CLI spells it
+    #   python -m repro.launch.fed_train --max-pending-reports 64
+    max_pending_reports=0,
     # Hot-path kernels (repro.kernels.dispatch): "auto" runs the Pallas
     # TPU kernels (fused Lloyd fit, fused KD-KL fwd+bwd, tiled KuLSIF
     # gram) on TPU and the jnp reference elsewhere — on CPU this is
@@ -97,3 +104,14 @@ result = simulator.run(cfg, dataset_name="mnist_feat",
 
 print(f"\nEdgeFD final accuracy: {result.final_acc:.3f}")
 print(f"bytes uploaded (ID logits only): {result.rounds[-1].bytes_up/1e6:.2f} MB")
+
+# To run the same experiment as a long-running, crash-safe *service* —
+# periodic atomic checkpoints of the full experiment state (scheduler
+# in-flight rounds, staleness buffers, rng streams, engine params) with
+# kill-and-resume that reproduces the uninterrupted logs bit-for-bit,
+# plus a served-model freshness metric (log.served_model_age_s) — use
+# the fed_serve driver (see `python -m repro.launch.fed_serve --help`):
+#   python -m repro.launch.fed_serve --rounds 10 --ckpt-dir ckpts \
+#       --ckpt-every 1 --fixed-phase-costs
+#   python -m repro.launch.fed_serve --rounds 10 --ckpt-dir ckpts \
+#       --ckpt-every 1 --fixed-phase-costs --resume

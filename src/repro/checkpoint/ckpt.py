@@ -1,26 +1,72 @@
-"""Flat-pytree checkpointing to .npz with sharding-aware restore.
+"""Checkpointing: flat-pytree .npz + a nested-manifest experiment-state format.
 
-Leaves are addressed by '/'-joined pytree paths. On restore, arrays are
-device_put with the provided shardings (pytree of NamedSharding or None),
-so a checkpoint written on one mesh can be reloaded onto another — resharding
-happens at restore time.
+Two layers share one on-disk container (a ``ckpt_<step:08d>.npz`` per step):
+
+``save_checkpoint`` / ``restore_checkpoint``
+    The array-pytree format: leaves are addressed by '/'-joined pytree
+    paths, restore happens *into the structure of* a caller-supplied
+    ``like_tree`` (dtype/shape-checked). On restore, arrays are
+    ``device_put`` with the provided shardings (pytree of NamedSharding or
+    None), so a checkpoint written on one mesh can be reloaded onto
+    another — resharding happens at restore time.
+
+``save_state`` / ``restore_state``
+    The experiment-state format (``repro.fed.state.ExperimentState``):
+    arbitrary nesting of dicts (string keys), lists, numpy/jax arrays and
+    plain scalars — ints of any width (rng bit-generator words), floats,
+    strs, bools, None. Arrays land as npz entries; everything else goes
+    into an embedded JSON manifest that records the nesting, so restore
+    needs no ``like_tree`` and returns plain dicts/lists.
+
+Both writers go through one atomic path: write to a deterministic
+``<final>.tmp.npz`` sibling (a name ``np.savez`` will not mangle — it only
+appends ``.npz`` when missing), fsync the file *and* the directory, then
+``os.replace`` onto the final name. A crash mid-write leaves only a
+``*.tmp.npz`` orphan, which ``latest_step`` sweeps. ``keep_last=K``
+retention prunes old steps after each successful save, and both restore
+entry points can fall back step-by-step past a truncated/corrupt file
+instead of taking the service down.
 """
 from __future__ import annotations
 
+import json
 import os
 import re
-from typing import Any, Optional
+import warnings
+import zipfile
+import zlib
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
 
+# manifest marker for an array leaf (the value is the npz entry name);
+# a dict key equal to this is reserved
+_ARRAY_REF = "__npz__"
+_MANIFEST_KEY = "__state_manifest__"
 
-def _flatten(tree) -> dict[str, np.ndarray]:
+# errors that mean "this checkpoint file is unreadable" (truncated zip,
+# torn write, bad CRC) — as opposed to structural errors like a shape
+# mismatch, which always raise
+_CORRUPT_ERRORS = (zipfile.BadZipFile, EOFError, OSError, zlib.error,
+                   ValueError, KeyError)
+
+
+def _ckpt_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.npz")
+
+
+def flatten_tree(tree) -> Dict[str, np.ndarray]:
+    """Flatten a pytree to ``{'/'-joined path: np.ndarray}``."""
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(_path_str(p) for p in path)
         flat[key] = np.asarray(leaf)
     return flat
+
+
+# historical (pre-export) name, kept for direct importers
+_flatten = flatten_tree
 
 
 def _path_str(p) -> str:
@@ -31,38 +77,225 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save_checkpoint(directory: str, step: int, tree) -> str:
-    os.makedirs(directory, exist_ok=True)
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    tmp = path + ".tmp"
-    np.savez(tmp, **_flatten(tree))
-    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
-    return path
+def unflatten_like(flat: Dict[str, np.ndarray], like_tree, shardings=None,
+                   *, source: str = "ckpt") -> Any:
+    """Rebuild ``like_tree``'s structure from a flat ``{path: array}`` dict.
 
-
-def latest_step(directory: str) -> Optional[int]:
-    if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
-    return max(steps) if steps else None
-
-
-def restore_checkpoint(directory: str, step: int, like_tree,
-                       shardings=None) -> Any:
-    """Restore into the structure of ``like_tree``; dtype/shape-checked."""
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    data = np.load(path)
+    Shapes are checked against ``like_tree`` (a mismatch is a structural
+    error and always raises); dtypes are cast to the like-leaf's. With
+    ``shardings`` (pytree of NamedSharding or None, same structure) each
+    leaf is ``device_put`` onto its sharding — resharding at restore time.
+    """
     leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
     shard_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
                     if shardings is not None else [None] * len(leaves_p))
     out = []
     for (pth, like), sh in zip(leaves_p, shard_leaves):
         key = "/".join(_path_str(p) for p in pth)
-        arr = data[key]
-        if tuple(arr.shape) != tuple(like.shape):
-            raise ValueError(f"shape mismatch at {key}: ckpt {arr.shape} vs "
-                             f"model {like.shape}")
-        arr = arr.astype(like.dtype)
+        if key not in flat:
+            raise KeyError(f"{source} is missing leaf {key!r}")
+        arr = np.asarray(flat[key])
+        if tuple(arr.shape) != tuple(np.shape(like)):
+            raise ValueError(f"shape mismatch at {key}: {source} "
+                             f"{arr.shape} vs model {np.shape(like)}")
+        arr = arr.astype(np.asarray(like).dtype)
         out.append(jax.device_put(arr, sh) if sh is not None else arr)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Atomic container I/O
+# ---------------------------------------------------------------------------
+
+def _atomic_savez(path: str, arrays: Dict[str, np.ndarray]) -> None:
+    """Write ``arrays`` to ``path`` atomically and durably.
+
+    The tmp name is deterministic and ends in ``.npz`` so ``np.savez``
+    writes exactly where we point it (handed a *name* without the suffix
+    it silently appends one — the historical bug left ``*.npz.tmp.npz``
+    orphans and made the final ``os.replace`` a guess). fsync-before-
+    rename plus a directory fsync makes the rename itself crash-durable.
+    """
+    tmp = path + ".tmp.npz"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    try:
+        dfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:
+        pass  # e.g. a filesystem without directory fds; best effort
+
+
+def _load_npz(path: str) -> Dict[str, np.ndarray]:
+    """Fully materialize an npz (decompression errors surface here)."""
+    with np.load(path, allow_pickle=False) as data:
+        return {k: data[k] for k in data.files}
+
+
+def checkpoint_steps(directory: str) -> List[int]:
+    """All step numbers with a (non-temp) checkpoint file, ascending."""
+    if not os.path.isdir(directory):
+        return []
+    return sorted(int(m.group(1)) for f in os.listdir(directory)
+                  if (m := re.match(r"ckpt_(\d+)\.npz$", f)))
+
+
+def _apply_retention(directory: str, keep_last: Optional[int]) -> None:
+    if not keep_last or keep_last < 1:
+        return
+    for s in checkpoint_steps(directory)[:-keep_last]:
+        try:
+            os.remove(_ckpt_path(directory, s))
+        except OSError:
+            pass  # a concurrent sweep already got it
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest checkpointed step, sweeping stale ``*.tmp*`` orphans.
+
+    A writer that died mid-save leaves a ``ckpt_*.tmp*`` sibling; those
+    are never valid restore targets, so they are deleted here — the one
+    place every resume path already calls.
+    """
+    if not os.path.isdir(directory):
+        return None
+    for f in os.listdir(directory):
+        if f.startswith("ckpt_") and ".tmp" in f:
+            try:
+                os.remove(os.path.join(directory, f))
+            except OSError:
+                pass
+    steps = checkpoint_steps(directory)
+    return steps[-1] if steps else None
+
+
+# ---------------------------------------------------------------------------
+# Array-pytree checkpoints (restore into a like_tree)
+# ---------------------------------------------------------------------------
+
+def save_checkpoint(directory: str, step: int, tree, *,
+                    keep_last: Optional[int] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = _ckpt_path(directory, step)
+    _atomic_savez(path, flatten_tree(tree))
+    _apply_retention(directory, keep_last)
+    return path
+
+
+def restore_checkpoint(directory: str, step: int, like_tree,
+                       shardings=None, *, fallback: bool = False) -> Any:
+    """Restore into the structure of ``like_tree``; dtype/shape-checked.
+
+    ``fallback=True`` treats an unreadable file (truncated zip, torn
+    write) as skippable: it warns and retries the previous step until one
+    loads. Structural errors — a shape mismatch, a missing leaf — always
+    raise: they mean the caller's model disagrees with the checkpoint,
+    and silently reaching for an older step would mask a real bug.
+    """
+    flat, path = _read_with_fallback(directory, step, fallback)
+    return unflatten_like(flat, like_tree, shardings, source=path)
+
+
+def _read_with_fallback(directory: str, step: int, fallback: bool):
+    candidates = [step]
+    if fallback:
+        candidates += [s for s in reversed(checkpoint_steps(directory))
+                       if s < step]
+    last_err: Optional[BaseException] = None
+    for s in candidates:
+        path = _ckpt_path(directory, s)
+        try:
+            return _load_npz(path), path
+        except _CORRUPT_ERRORS as e:
+            last_err = e
+            if fallback:
+                warnings.warn(
+                    f"checkpoint {path} is unreadable ({e!r}); falling "
+                    "back to the previous step")
+    raise last_err if last_err is not None else FileNotFoundError(
+        _ckpt_path(directory, step))
+
+
+# ---------------------------------------------------------------------------
+# Nested-manifest experiment state (no like_tree needed)
+# ---------------------------------------------------------------------------
+
+def save_state(directory: str, step: int, state, *,
+               keep_last: Optional[int] = None) -> str:
+    """Serialize arbitrarily nested experiment state to one npz.
+
+    ``state`` may nest dicts (string keys), lists/tuples (restored as
+    lists), numpy/jax arrays, and plain scalars — ints of any width (rng
+    bit-generator words exceed 64 bits), floats, strs, bools, None.
+    """
+    arrays: Dict[str, np.ndarray] = {}
+
+    def enc(obj, path):
+        if isinstance(obj, (np.ndarray, jax.Array)):
+            arrays[path] = np.asarray(obj)
+            return {_ARRAY_REF: path}
+        if isinstance(obj, np.generic):
+            return obj.item()
+        if isinstance(obj, dict):
+            for k in obj:
+                if not isinstance(k, str):
+                    raise TypeError(
+                        f"state dict keys must be str at {path!r}, got "
+                        f"{k!r} — encode int/tuple keys as list entries")
+                if k == _ARRAY_REF:
+                    raise TypeError(f"dict key {_ARRAY_REF!r} is reserved "
+                                    f"(at {path!r})")
+            return {k: enc(v, f"{path}/{k}") for k, v in obj.items()}
+        if isinstance(obj, (list, tuple)):
+            return [enc(v, f"{path}/{i}") for i, v in enumerate(obj)]
+        if obj is None or isinstance(obj, (bool, int, float, str)):
+            return obj
+        raise TypeError(
+            f"unserializable state leaf at {path!r}: {type(obj).__name__}")
+
+    manifest = enc(state, "state")
+    arrays[_MANIFEST_KEY] = np.frombuffer(
+        json.dumps(manifest).encode("utf-8"), np.uint8)
+    os.makedirs(directory, exist_ok=True)
+    path = _ckpt_path(directory, step)
+    _atomic_savez(path, arrays)
+    _apply_retention(directory, keep_last)
+    return path
+
+
+def restore_state(directory: str, step: Optional[int] = None, *,
+                  fallback: bool = True) -> Any:
+    """Load a ``save_state`` checkpoint back into plain dicts/lists.
+
+    ``step=None`` picks ``latest_step``. With ``fallback`` (the default —
+    this is the long-running service's restore path) an unreadable file
+    warns and falls back to the previous step instead of crashing.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"no checkpoints under {directory!r}")
+    arrays, path = _read_with_fallback(directory, step, fallback)
+    if _MANIFEST_KEY not in arrays:
+        raise KeyError(
+            f"{path} has no state manifest — it is an array-pytree "
+            "checkpoint; restore it with restore_checkpoint(like_tree)")
+    manifest = json.loads(arrays[_MANIFEST_KEY].tobytes().decode("utf-8"))
+
+    def dec(obj):
+        if isinstance(obj, dict):
+            if set(obj) == {_ARRAY_REF}:
+                return arrays[obj[_ARRAY_REF]]
+            return {k: dec(v) for k, v in obj.items()}
+        if isinstance(obj, list):
+            return [dec(v) for v in obj]
+        return obj
+
+    return dec(manifest)

@@ -217,6 +217,14 @@ class FedConfig:
     # reporting with probability dropout_prob — its fresh report never
     # reaches the server, so its row rides the staleness buffer. 0 = never.
     dropout_prob: float = 0.0
+    # admission/backpressure: how many client reports the server will hold
+    # in flight (summed over pending, un-aggregated rounds) before it stops
+    # admitting. Reports arrive in simulated-arrival order (straggler lane
+    # finish, ties by client id); overflow clients are demoted to
+    # non-participants for the round and drain through the staleness
+    # machinery like dropouts. 0 (default) = unbounded, bit-for-bit the
+    # legacy ingestion.
+    max_pending_reports: int = 0
     # kernel backend for the round hot paths (repro.kernels.dispatch):
     # "auto" = Pallas kernels on TPU, jnp reference elsewhere (also honors
     # the REPRO_KERNEL_BACKEND env var / kernel_backend() context manager);

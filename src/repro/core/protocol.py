@@ -69,6 +69,15 @@ class RoundLog:
     # (repro.fed.clock) — the axis on which round_mode="overlap" beats
     # "sync"; see benchmarks/async_rounds.py
     sim_finish_s: float = 0.0
+    # served-model freshness: a user query served between model refreshes
+    # hits the *last retired* round's model, so when round r retires at
+    # sim_finish_s the model being replaced has been serving since the
+    # previous retirement — this field is that serving interval in
+    # simulated seconds (the maximum sim-time age a query could have hit;
+    # round 0 measures from service start, i.e. the init model's tenure).
+    # Overlap mode retires rounds faster than lockstep, so this is the
+    # serving-facing win of the pipelined scheduler (launch/fed_serve.py).
+    served_model_age_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -185,6 +194,18 @@ class LoopEngine:
 
     def phase_eval(self, x_test, y_test) -> List[float]:
         return [c.evaluate(x_test, y_test) for c in self.clients]
+
+    # ------------------------------------------------- resumable service
+    def state_dict(self) -> Dict:
+        """Per-client mutable state (params, opt-state, rng) in the shared
+        engine checkpoint format (``repro.fed.state``) — portable across
+        loop/cohort/mesh engines."""
+        from repro.fed.state import clients_state_dict
+        return clients_state_dict(self.clients)
+
+    def load_state_dict(self, sd: Dict) -> None:
+        from repro.fed.state import load_clients_state_dict
+        load_clients_state_dict(self.clients, sd)
 
     # -------------------------- historical mega-call names (thin aliases)
     def local_train_all(self, epochs: int, batch_size: int,

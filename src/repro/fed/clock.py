@@ -288,6 +288,25 @@ class SimTimeline:
         self.client_free = np.zeros((len(self.speeds),), np.float64)
         self.server_free = 0.0
 
+    # ------------------------------------------------- resumable service
+    def state_dict(self) -> dict:
+        """Lane occupancy for ``repro.fed.state.ExperimentState``.
+
+        Speeds are not captured: they are a pure function of
+        ``(seed, client, straggler_factor)`` and rebuilt at construction.
+        """
+        return {"client_free": self.client_free.copy(),
+                "server_free": float(self.server_free)}
+
+    def load_state_dict(self, sd: dict) -> None:
+        lanes = np.asarray(sd["client_free"], np.float64)
+        if lanes.shape != self.client_free.shape:
+            raise ValueError(
+                f"timeline lane-count mismatch: checkpoint {lanes.shape} "
+                f"vs fleet {self.client_free.shape}")
+        self.client_free = lanes.copy()
+        self.server_free = float(sd["server_free"])
+
     def client_phase(self, participants: Optional[np.ndarray], base_s: float,
                      ready_s: float = 0.0,
                      offsets: Optional[np.ndarray] = None) -> float:

@@ -930,6 +930,28 @@ class _Cohort:
             c.params = _unstack_tree(params, i)
             c.opt_state = _unstack_tree(opt_state, i)
 
+    def adopt_member_state(self) -> None:
+        """Re-stage the stacked params/opt-state from the member ``Client``
+        objects — the inverse of ``sync_to_clients``, used on checkpoint
+        restore (the engine checkpoint format is per-client, so a restore
+        writes the clients first and re-stacks here). Replays the exact
+        construction-time staging: numpy host masters in waved mode,
+        mesh-placed padded device stacks otherwise."""
+        members = self.members
+        if self._waved:
+            def _np_stack(*leaves):
+                return np.stack([np.asarray(l) for l in leaves])
+            self._hparams = jax.tree.map(_np_stack,
+                                         *[c.params for c in members])
+            self._hopt = jax.tree.map(_np_stack,
+                                      *[c.opt_state for c in members])
+            return
+        stand_ins = [members[0]] * (self.c_pad - len(members))
+        self.params = self._put_c(
+            _stack_trees([c.params for c in [*members, *stand_ins]]))
+        self.opt_state = self._put_c(
+            _stack_trees([c.opt_state for c in [*members, *stand_ins]]))
+
 
 class CohortEngine:
     """Engine over architecture-grouped cohorts; same interface as LoopEngine.
@@ -1068,3 +1090,20 @@ class CohortEngine:
     def sync_to_clients(self) -> None:
         for cohort in self.cohorts:
             cohort.sync_to_clients()
+
+    # ------------------------------------------------- resumable service
+    def state_dict(self) -> Dict:
+        """Per-client mutable state in the shared engine checkpoint format
+        (``repro.fed.state``): the stacked/host-master training state is
+        synced back onto the ``Client`` objects first, so the emitted
+        checkpoint is identical in layout to the loop engine's and
+        restores under any engine/mesh/wave configuration."""
+        from repro.fed.state import clients_state_dict
+        self.sync_to_clients()
+        return clients_state_dict(self.clients)
+
+    def load_state_dict(self, sd: Dict) -> None:
+        from repro.fed.state import load_clients_state_dict
+        load_clients_state_dict(self.clients, sd)
+        for cohort in self.cohorts:
+            cohort.adopt_member_state()

@@ -164,6 +164,34 @@ class StalenessBuffer:
         self.last_round = np.zeros((num_clients,), np.int64)
         self._last_merge_round: Optional[int] = None
 
+    # ------------------------------------------------- resumable service
+    def state_dict(self) -> dict:
+        """Full buffer contents for ``repro.fed.state.ExperimentState``."""
+        return {"logits": self.logits, "masks": self.masks,
+                "reported": self.reported, "last_round": self.last_round,
+                "last_merge_round": self._last_merge_round}
+
+    def load_state_dict(self, sd: dict) -> None:
+        logits = np.asarray(sd["logits"], np.float32)
+        if logits.shape != self.logits.shape:
+            raise ValueError(
+                f"staleness buffer shape mismatch: checkpoint "
+                f"{logits.shape} vs buffer {self.logits.shape}")
+        self.logits = logits
+        self.masks = np.asarray(sd["masks"], bool)
+        self.reported = np.asarray(sd["reported"], bool)
+        self.last_round = np.asarray(sd["last_round"], np.int64)
+        lmr = sd.get("last_merge_round")
+        self._last_merge_round = None if lmr is None else int(lmr)
+
+    @classmethod
+    def from_state_dict(cls, sd: dict) -> "StalenessBuffer":
+        """Rebuild a (lazily-materialized) buffer from its state dict."""
+        c, t, k = np.asarray(sd["logits"]).shape
+        buf = cls(c, t, k)
+        buf.load_state_dict(sd)
+        return buf
+
     def merge(self, round_idx: int, participants, idx, logits, masks,
               decay: float) -> StaleMerge:
         """Record fresh reports, fill non-participant rows from the cache.

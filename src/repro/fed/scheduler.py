@@ -122,6 +122,10 @@ def validate_config(cfg) -> None:
         v = getattr(cfg, knob)
         if not 0.0 <= v < 1.0:
             raise ValueError(f"{knob} must be in [0, 1), got {v!r}")
+    if getattr(cfg, "max_pending_reports", 0) < 0:
+        raise ValueError(
+            f"max_pending_reports must be >= 0 (0 = unbounded), got "
+            f"{cfg.max_pending_reports!r}")
 
 
 def round_phases(method) -> Tuple[str, ...]:
@@ -145,7 +149,8 @@ class _RoundState:
     __slots__ = ("r", "part", "kw", "idx", "px", "powner", "means_counts",
                  "teacher", "valid", "teacher_by_class", "valid_by_class",
                  "local_losses", "distill_losses", "id_frac",
-                 "mean_staleness", "accs", "phase_s", "sim_finish_s")
+                 "mean_staleness", "accs", "phase_s", "sim_finish_s",
+                 "report_payload")
 
     def __init__(self, r: int):
         self.r = r
@@ -167,6 +172,65 @@ class _RoundState:
         self.accs = None
         self.phase_s: Dict[str, float] = {}
         self.sim_finish_s = 0.0
+        # (logits, masks) parked between the report body and the
+        # post-pricing ingest event; consumed within the same node
+        # execution, so never present at a phase boundary
+        self.report_payload = None
+
+    def state_dict(self) -> Dict:
+        """Mutable payload of a partially-executed (in-flight) round.
+
+        ``px``/``powner``/``kw`` are derived fields (recomputed from
+        ``idx``/``part`` on restore) and ``report_payload`` is transient
+        within one node execution, so none of them is captured. Losses and
+        accuracies are plain python floats end-to-end, which the JSON
+        manifest round-trips exactly (``repr`` round-trip)."""
+        from repro.fed.state import opt_array
+        return {
+            "r": int(self.r),
+            "part": opt_array(self.part, bool),
+            "idx": opt_array(self.idx),
+            "means_counts": (None if self.means_counts is None
+                             else [[np.asarray(m), np.asarray(c)]
+                                   for m, c in self.means_counts]),
+            "teacher": opt_array(self.teacher),
+            "valid": opt_array(self.valid),
+            "teacher_by_class": opt_array(self.teacher_by_class),
+            "valid_by_class": opt_array(self.valid_by_class),
+            "local_losses": [float(v) for v in self.local_losses],
+            "distill_losses": [float(v) for v in self.distill_losses],
+            "id_frac": float(self.id_frac),
+            "mean_staleness": float(self.mean_staleness),
+            "accs": (None if self.accs is None
+                     else [float(a) for a in self.accs]),
+            "phase_s": {k: float(v) for k, v in self.phase_s.items()},
+            "sim_finish_s": float(self.sim_finish_s),
+        }
+
+    def load_state_dict(self, sd: Dict, scheduler) -> None:
+        from repro.fed.state import opt_array
+        self.part = opt_array(sd["part"], bool)
+        self.kw = {} if self.part is None else {"participants": self.part}
+        self.idx = opt_array(sd["idx"])
+        if self.idx is not None:
+            self.px = scheduler.server.proxy.x[self.idx]
+            self.powner = scheduler.server.proxy.owner[self.idx]
+        mc = sd["means_counts"]
+        self.means_counts = (None if mc is None
+                             else [(np.asarray(m), np.asarray(c))
+                                   for m, c in mc])
+        self.teacher = opt_array(sd["teacher"])
+        self.valid = opt_array(sd["valid"])
+        self.teacher_by_class = opt_array(sd["teacher_by_class"])
+        self.valid_by_class = opt_array(sd["valid_by_class"])
+        self.local_losses = [float(v) for v in sd["local_losses"]]
+        self.distill_losses = [float(v) for v in sd["distill_losses"]]
+        self.id_frac = float(sd["id_frac"])
+        self.mean_staleness = float(sd["mean_staleness"])
+        accs = sd["accs"]
+        self.accs = None if accs is None else [float(a) for a in accs]
+        self.phase_s = {k: float(v) for k, v in sd["phase_s"].items()}
+        self.sim_finish_s = float(sd["sim_finish_s"])
 
 
 class RoundScheduler:
@@ -204,6 +268,18 @@ class RoundScheduler:
         # pin this, and it is the record of what the pipeline actually did
         self.trace: List[Tuple[str, int]] = []
         self._sim_end: Dict[Tuple[str, int], float] = {}
+        # event-loop state (begin()/step()/drain()); a fresh scheduler has
+        # no window open
+        self._order = {p: i for i, p in enumerate(self.phases)}
+        self._window: Optional[Tuple[int, int]] = None
+        self._states: Dict[int, _RoundState] = {}
+        self._nodes: Dict[Tuple[str, int], List] = {}
+        self._pending: set = set()
+        self._done: set = set()
+        self.logs: List[RoundLog] = []
+        # sim time of the last round retirement — the served-model
+        # freshness reference (service start = 0.0)
+        self._last_retire_s = 0.0
         # engine entry points resolved once (per-phase interface, with the
         # historical *_all fallback for pre-built engines)
         self._local_train = _entry(engine, "phase_local_train",
@@ -245,38 +321,170 @@ class RoundScheduler:
                 nodes[(p, r)] = deps
         return nodes
 
+    # ------------------------------------------------------- the event loop
+    def begin(self, start: int, count: int) -> None:
+        """Open the round window ``[start, start + count)``.
+
+        Builds the node graph and resets per-window bookkeeping; the
+        simulated timeline, trace and node finish times carry over from any
+        previous window on this scheduler (that is how sequential windows
+        chain). ``step()`` then executes one node at a time."""
+        if self._pending:
+            raise RuntimeError(
+                f"cannot begin a new round window: {len(self._pending)} "
+                "nodes of the current window are still pending")
+        rounds = range(start, start + count)
+        self._window = (start, count)
+        self._states = {r: _RoundState(r) for r in rounds}
+        self._nodes = self._build_deps(rounds)
+        self._pending = set(self._nodes)
+        self._done = set()
+        self.logs = []
+
+    def has_pending(self) -> bool:
+        """True while the open window still has nodes to execute."""
+        return bool(self._pending)
+
+    def step(self) -> Tuple[str, int, Optional[RoundLog]]:
+        """Execute the single next ready node; the scheduler's event tick.
+
+        Returns ``(phase, round, log)`` where ``log`` is the finished
+        ``RoundLog`` when this node retired its round, else ``None``. Every
+        return is a phase boundary — a consistent point to ``snapshot()``
+        (or crash at: the kill-and-resume harness keys off these)."""
+        if not self._pending:
+            raise RuntimeError("no pending nodes — call begin() first")
+        ready = [
+            pr for pr in self._pending
+            if all(d[1] not in self._states or (d[0], d[1]) in self._done
+                   for d in self._nodes[pr])
+        ]
+        # deterministic pipeline policy: front (client-side) phases
+        # before drain phases, oldest round first, intra-round order
+        # last — under sync exactly one node is ever ready, so this
+        # replays the legacy lockstep order
+        phase, r = min(ready, key=lambda pr: (pr[0] not in FRONT_PHASES,
+                                              pr[1], self._order[pr[0]]))
+        self._run_node(phase, self._states[r], self._nodes[(phase, r)])
+        self._pending.remove((phase, r))
+        self._done.add((phase, r))
+        log = None
+        if phase == self.phases[-1]:
+            log = self._finish_round(self._states[r])
+            self.logs.append(log)
+            self._retire(r)
+        return phase, r, log
+
+    def drain(self, progress: Optional[Callable[[RoundLog], None]] = None
+              ) -> List[RoundLog]:
+        """Run the open window to completion."""
+        while self._pending:
+            _, _, log = self.step()
+            if log is not None and progress:
+                progress(log)
+        return self.logs
+
     def run_rounds(self, start: int, count: int,
                    progress: Optional[Callable[[RoundLog], None]] = None
                    ) -> List[RoundLog]:
         """Execute rounds ``[start, start + count)`` through the graph."""
+        self.begin(start, count)
+        return self.drain(progress)
+
+    def _retire(self, r: int) -> None:
+        """Drop a retired round's bookkeeping so memory stays bounded over
+        a long-running service (rounds retire in round order — the eval
+        nodes chain through same-phase order deps).
+
+        The ready check treats rounds absent from ``_states`` as
+        satisfied, so pruning is transparent to dependents. Simulated
+        finish times survive a little longer: ``(eval, q)`` is the
+        admission dep of ``local_train(q + max_inflight)``, so entries are
+        only dropped once they are ``max_inflight`` rounds stale."""
+        del self._states[r]
+        self._done -= {(p, r) for p in self.phases}
+        horizon = r - self.max_inflight
+        for key in [k for k in self._sim_end if k[1] <= horizon]:
+            del self._sim_end[key]
+
+    # --------------------------------------------------- snapshot / restore
+    def snapshot(self):
+        """Capture the full experiment at the current phase boundary.
+
+        Returns an ``ExperimentState`` assembling this scheduler's node
+        bookkeeping and in-flight round payloads with the ``state_dict()``
+        of the timeline, the server (pending reports, staleness buffers,
+        byte ledger, rng) and the engine (per-client params/opt-state/rng).
+        Call only between ``step()``s — mid-node state is not capturable."""
+        from repro.fed.state import STATE_VERSION, ExperimentState
+        if self._window is None:
+            raise RuntimeError("nothing to snapshot — call begin() first")
+        if not hasattr(self.engine, "state_dict"):
+            raise TypeError(
+                f"engine {type(self.engine).__name__} has no state_dict(); "
+                "snapshot/restore needs the per-client state hooks")
+        inflight = sorted(
+            r for r in self._states
+            if any((p, r) in self._done for p in self.phases))
+        sched = {
+            "window": [int(self._window[0]), int(self._window[1])],
+            "completed": len(self.logs),
+            "done": sorted([p, int(r)] for p, r in self._done),
+            "trace": [[p, int(r)] for p, r in self.trace],
+            "sim_end": sorted([p, int(r), float(t)]
+                              for (p, r), t in self._sim_end.items()),
+            "last_retire_s": float(self._last_retire_s),
+            "states": [self._states[r].state_dict() for r in inflight],
+        }
+        import dataclasses as _dc
+        return ExperimentState(
+            version=STATE_VERSION,
+            round_mode=self.mode,
+            scheduler=sched,
+            timeline=self.timeline.state_dict(),
+            server=self.server.state_dict(),
+            engine=self.engine.state_dict(),
+            logs=[_dc.asdict(lg) for lg in self.logs],
+        )
+
+    def restore(self, state) -> None:
+        """Rebuild the event loop from a ``snapshot()`` (or its tree form).
+
+        The scheduler must be freshly constructed from the *same*
+        ``FedConfig`` (datasets, method, engine layout and rng seeds are
+        rebuilt, not checkpointed); this overlays every piece of mutable
+        state, after which ``drain()`` continues the run with logs
+        bit-for-bit identical to the uninterrupted one."""
+        from repro.fed.state import ExperimentState
+        if not isinstance(state, ExperimentState):
+            state = ExperimentState.from_tree(state)
+        if state.round_mode != self.mode:
+            raise ValueError(
+                f"checkpoint was written in round_mode={state.round_mode!r} "
+                f"but this scheduler runs {self.mode!r}")
+        sched = state.scheduler
+        start, count = (int(v) for v in sched["window"])
         rounds = range(start, start + count)
-        states = {r: _RoundState(r) for r in rounds}
-        nodes = self._build_deps(rounds)
-        done: set = set()
-        logs: List[RoundLog] = []
-        pending = set(nodes)
-        order = {p: i for i, p in enumerate(self.phases)}
-        while pending:
-            ready = [
-                pr for pr in pending
-                if all(d[1] not in states or (d[0], d[1]) in done
-                       for d in nodes[pr])
-            ]
-            # deterministic pipeline policy: front (client-side) phases
-            # before drain phases, oldest round first, intra-round order
-            # last — under sync exactly one node is ever ready, so this
-            # replays the legacy lockstep order
-            phase, r = min(ready, key=lambda pr: (pr[0] not in FRONT_PHASES,
-                                                  pr[1], order[pr[0]]))
-            self._run_node(phase, states[r], nodes[(phase, r)])
-            pending.remove((phase, r))
-            done.add((phase, r))
-            if phase == self.phases[-1]:
-                log = self._finish_round(states[r])
-                logs.append(log)
-                if progress:
-                    progress(log)
-        return logs
+        self._window = (start, count)
+        self._nodes = self._build_deps(rounds)
+        completed = int(sched["completed"])
+        # rounds retire in order, so the retired set is a prefix
+        retired = set(range(start, start + completed))
+        self._done = {(p, int(r)) for p, r in sched["done"]}
+        self._states = {r: _RoundState(r) for r in rounds
+                        if r not in retired}
+        for st_sd in sched["states"]:
+            self._states[int(st_sd["r"])].load_state_dict(st_sd, self)
+        self._pending = {pr for pr in self._nodes
+                         if pr[1] not in retired and pr not in self._done}
+        self.trace = [(p, int(r)) for p, r in sched["trace"]]
+        self._sim_end = {(p, int(r)): float(t)
+                         for p, r, t in sched["sim_end"]}
+        self._last_retire_s = float(sched["last_retire_s"])
+        self.timeline.load_state_dict(state.timeline)
+        self.server.load_state_dict(state.server)
+        self.engine.load_state_dict(state.engine)
+        self.logs = [RoundLog(**lg) for lg in state.logs]
 
     # ------------------------------------------------------- node execution
     def _run_node(self, phase: str, st: _RoundState, deps) -> None:
@@ -286,6 +494,14 @@ class RoundScheduler:
         dt = time.perf_counter() - t0
         st.phase_s[phase] = st.phase_s.get(phase, 0.0) + dt
         self._account(phase, st, deps, dt)
+        if phase == "report":
+            # ingestion is an *event* driven by the arrival-trace clock: it
+            # runs after the node is priced so each report's simulated
+            # arrival time (the client's report-lane finish) is known, and
+            # admission can replay them in arrival order
+            t0 = time.perf_counter()
+            self._ingest_reports(st)
+            st.phase_s[phase] += time.perf_counter() - t0
 
     def _account(self, phase: str, st: _RoundState, deps,
                  measured_s: float) -> None:
@@ -366,7 +582,40 @@ class RoundScheduler:
         st.idx = self.server.select_indices(cfg.proxy_batch)
         st.px = self.server.proxy.x[st.idx]
         st.powner = self.server.proxy.owner[st.idx]
-        logits, masks = self._report(st.px, st.powner, **st.kw)
+        # computed here (the client-side work) but ingested post-pricing in
+        # _ingest_reports, once simulated arrival times exist
+        st.report_payload = self._report(st.px, st.powner, **st.kw)
+
+    def _ingest_reports(self, st: _RoundState) -> None:
+        """Server-side report ingestion, as an arrival-ordered event.
+
+        Runs right after the report node is priced onto the timeline. With
+        ``max_pending_reports > 0`` the server admits reports in simulated
+        arrival order (each client's report-lane finish time, ties broken
+        by client id) until the in-flight budget is full; overflow clients
+        are demoted to non-participants for the rest of the round and drain
+        through the staleness machinery exactly like dropouts — their
+        buffer entries keep aging forward, so ages never go negative. With
+        the cap at 0 (default) admission is the identity and the legacy
+        lockstep byte stream is preserved bit-for-bit."""
+        if self.method.data_free or st.report_payload is None:
+            return
+        logits, masks = st.report_payload
+        st.report_payload = None
+        cfg = self.cfg
+        cap = int(getattr(self.server, "max_pending_reports", 0))
+        if cap > 0:
+            ids = (np.arange(self.engine.num_clients)
+                   if st.part is None else np.flatnonzero(st.part))
+            arrival = self.timeline.client_free[ids]
+            # primary key: simulated arrival; secondary: client id
+            ordered = ids[np.lexsort((ids, arrival))]
+            admitted_ids = self.server.admit_reports(st.r, ordered)
+            if admitted_ids.size < ids.size:
+                admitted = np.zeros((self.engine.num_clients,), bool)
+                admitted[admitted_ids] = True
+                st.part = admitted
+                st.kw = {"participants": st.part}
         # ID fraction over the clients that actually reported; stale rows
         # merged at aggregation additionally carry reuse
         st.id_frac = (float(masks.mean()) if st.part is None
@@ -404,6 +653,14 @@ class RoundScheduler:
         st.accs = self._eval(self.x_test, self.y_test)
 
     def _finish_round(self, st: _RoundState) -> RoundLog:
+        # served-model freshness: how long the model this round replaces
+        # was the one a user query would hit (sim seconds since the last
+        # retirement; round 0 measures from service start). Overlap rounds
+        # retire in round order on the host but may finish out of order on
+        # the sim timeline — the interval clamps at 0 there, and the
+        # reference only moves forward.
+        age = max(0.0, st.sim_finish_s - self._last_retire_s)
+        self._last_retire_s = max(self._last_retire_s, st.sim_finish_s)
         return RoundLog(
             round=st.r,
             mean_acc=float(np.mean(st.accs)),
@@ -420,4 +677,5 @@ class RoundScheduler:
             mean_staleness=st.mean_staleness,
             phase_s=dict(st.phase_s),
             sim_finish_s=st.sim_finish_s,
+            served_model_age_s=age,
         )

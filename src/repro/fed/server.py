@@ -60,12 +60,23 @@ class _PendingPartials(NamedTuple):
 
 class Server:
     def __init__(self, proxy: ProxyData, *, seed: int = 0,
-                 num_edges: int = 1):
+                 num_edges: int = 1, max_pending_reports: int = 0):
         if num_edges < 1:
             raise ValueError(f"num_edges must be >= 1, got {num_edges!r}")
+        if max_pending_reports < 0:
+            raise ValueError(f"max_pending_reports must be >= 0 "
+                             f"(0 = unbounded), got {max_pending_reports!r}")
         self.proxy = proxy
         self.rng = np.random.default_rng(seed + 7)
         self.num_edges = int(num_edges)
+        # admission/backpressure: the ingest queue holds at most this many
+        # client reports across all in-flight rounds (0 = unbounded, the
+        # legacy behavior). A report arriving at a full queue is refused —
+        # the client's round contribution drains through the staleness
+        # machinery like a dropout. Counted per round in
+        # ``_inflight_reports`` and released by ``aggregate_round``.
+        self.max_pending_reports = int(max_pending_reports)
+        self._inflight_reports: Dict[int, int] = {}
         self.bytes_received = 0
         self.bytes_broadcast = 0
         # lazily-sized staleness buffer (partial participation only): the
@@ -93,6 +104,28 @@ class Server:
 
     def select_indices(self, batch: int) -> np.ndarray:
         return select_round_indices(self.rng, self.proxy, batch)
+
+    def admit_reports(self, round_idx: int,
+                      ordered_ids: np.ndarray) -> np.ndarray:
+        """Admission control over one round's report arrivals.
+
+        ``ordered_ids``: the round's reporting client ids in simulated-
+        arrival order (the scheduler sorts by report-phase lane finish,
+        ties broken by id). Each arrival is admitted while the ingest
+        queue has room — ``max_pending_reports`` minus the reports already
+        parked for not-yet-aggregated rounds — and refused afterwards, so
+        exactly the *earliest* arrivals of an overloaded round get in.
+        Returns the admitted prefix; with ``max_pending_reports=0`` every
+        report is admitted and nothing is recorded (the legacy path).
+        """
+        ordered_ids = np.asarray(ordered_ids)
+        if self.max_pending_reports <= 0:
+            return ordered_ids
+        used = sum(self._inflight_reports.values())
+        free = max(0, self.max_pending_reports - used)
+        admitted = ordered_ids[:free]
+        self._inflight_reports[round_idx] = int(admitted.size)
+        return admitted
 
     def merge_stale(self, round_idx: int, participants, idx, logits, masks,
                     *, decay: float) -> StaleMerge:
@@ -200,6 +233,9 @@ class Server:
             raise ValueError(
                 f"no ingested reports for round {round_idx}; call "
                 "ingest_reports first") from None
+        # aggregation consumes the round's parked reports — release their
+        # admission-queue slots so later rounds stop being backpressured
+        self._inflight_reports.pop(round_idx, None)
         if isinstance(p, _PendingPartials):
             # two-tier root: fuse the E edge partials (the filter and
             # staleness weights were already folded in at the edges)
@@ -295,3 +331,84 @@ class Server:
         # report zero download traffic for FKD/PLS data-free rounds)
         self.bytes_broadcast += int(np.prod(teacher.shape)) * 4
         return np.asarray(teacher), np.asarray(valid)
+
+    # ------------------------------------------------- resumable service
+    def state_dict(self) -> dict:
+        """All mutable server state (``repro.fed.state.ExperimentState``):
+        rng, byte ledger, staleness buffers (flat + per-edge), shard
+        bounds, admission-queue occupancy and the parked per-round report
+        payloads. The proxy dataset is rebuilt from config, not captured.
+        """
+        from repro.fed.state import rng_state_dict
+        pending = []
+        for r in sorted(self._pending):
+            p = self._pending[r]
+            if isinstance(p, _PendingPartials):
+                pending.append({
+                    "round": r, "kind": "partials",
+                    "nums": p.nums, "dens": p.dens,
+                    "uploaded_bytes": int(p.uploaded_bytes),
+                    "mean_staleness": float(p.mean_staleness)})
+                continue
+            m = p.merged
+            pending.append({
+                "round": r, "kind": "reports",
+                "participants": p.participants,
+                "logits": p.logits, "masks": p.masks,
+                "merged": None if m is None else {
+                    "logits": m.logits, "masks": m.masks,
+                    "client_weights": m.client_weights,
+                    "mean_staleness": float(m.mean_staleness),
+                    "ages_sum": float(m.ages_sum),
+                    "num_contributing": int(m.num_contributing)}})
+        return {
+            "rng": rng_state_dict(self.rng),
+            "bytes_received": int(self.bytes_received),
+            "bytes_broadcast": int(self.bytes_broadcast),
+            "stale": (None if self._stale is None
+                      else self._stale.state_dict()),
+            "edge_stale": [None if b is None else b.state_dict()
+                           for b in self._edge_stale],
+            "shard_bounds": (None if self._shard_slices is None
+                             else [[s.start, s.stop]
+                                   for s in self._shard_slices]),
+            "inflight_reports": [[r, n] for r, n
+                                 in sorted(self._inflight_reports.items())],
+            "pending": pending,
+        }
+
+    def load_state_dict(self, sd: dict) -> None:
+        from repro.fed.state import load_rng_state, opt_array
+        load_rng_state(self.rng, sd["rng"])
+        self.bytes_received = int(sd["bytes_received"])
+        self.bytes_broadcast = int(sd["bytes_broadcast"])
+        self._stale = (None if sd["stale"] is None
+                       else StalenessBuffer.from_state_dict(sd["stale"]))
+        self._edge_stale = [
+            None if b is None else StalenessBuffer.from_state_dict(b)
+            for b in (sd.get("edge_stale") or [])]
+        bounds = sd.get("shard_bounds")
+        self._shard_slices = (None if bounds is None
+                              else [slice(int(a), int(b))
+                                    for a, b in bounds])
+        self._inflight_reports = {int(r): int(n)
+                                  for r, n in sd.get("inflight_reports", [])}
+        self._pending = {}
+        for e in sd["pending"]:
+            r = int(e["round"])
+            if e["kind"] == "partials":
+                self._pending[r] = _PendingPartials(
+                    np.asarray(e["nums"]), np.asarray(e["dens"]),
+                    int(e["uploaded_bytes"]), float(e["mean_staleness"]))
+                continue
+            m = e["merged"]
+            merged = None if m is None else StaleMerge(
+                np.asarray(m["logits"], np.float32),
+                np.asarray(m["masks"], bool),
+                np.asarray(m["client_weights"], np.float32),
+                float(m["mean_staleness"]), float(m["ages_sum"]),
+                int(m["num_contributing"]))
+            self._pending[r] = _PendingReports(
+                opt_array(e["participants"], bool),
+                opt_array(e["logits"], np.float32),
+                opt_array(e["masks"], bool), merged)

@@ -50,7 +50,9 @@ def build_experiment(cfg: FedConfig, dataset_name: str = "mnist_feat",
                              seed=cfg.seed)
     proxy = build_proxy(clients_data, cfg.proxy_fraction, seed=cfg.seed)
     server = Server(proxy, seed=cfg.seed,
-                    num_edges=cfg.num_edge_aggregators)
+                    num_edges=cfg.num_edge_aggregators,
+                    max_pending_reports=getattr(cfg, "max_pending_reports",
+                                                0))
     method = get_method(cfg.method)
 
     image_mode = np.asarray(ds.x).ndim == 4

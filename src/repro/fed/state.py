@@ -1,0 +1,144 @@
+"""Externalized experiment state: everything a federated run needs to resume.
+
+A batch simulator can keep all mid-experiment state implicit in one
+process; a long-running federated *service* cannot — scheduler in-flight
+rounds, ``StalenessBuffer`` contents, rng streams and engine parameters
+must survive a restart. ``ExperimentState`` is the explicit, serializable
+container for that state, assembled by ``RoundScheduler.snapshot()`` from
+per-layer ``state_dict()`` hooks (``Server``, ``StalenessBuffer``,
+``SimTimeline``, both engines) and written through
+``repro.checkpoint.ckpt.save_state`` (atomic write, retention, corrupt-
+file fallback).
+
+Everything in here is *mutable* run state. Deterministically rebuildable
+structure — datasets, partitions, client model definitions, learned DREs
+(their fit consumes only ``(seed, private data)``) — is deliberately NOT
+captured: a resume first rebuilds the experiment from the same
+``FedConfig`` and then overlays this state, which keeps checkpoints small
+and engine-portable (a loop-engine checkpoint restores into a cohort or
+mesh-sharded engine and vice versa, because engine ``state_dict()``s are
+keyed per client).
+
+The round-boundary invariants that make the bit-for-bit resume guarantee
+hold:
+
+  * every rng that advances during rounds is captured exactly (numpy
+    ``Generator.bit_generator.state`` — the 128-bit PCG64 words serialize
+    as arbitrary-width JSON ints);
+  * participation/churn/dropout/arrival draws are stateless in
+    ``(seed, round, client)`` (``repro.fed.participation`` / ``clock``),
+    so they need no cursor beyond the round indices already in the
+    scheduler's node sets;
+  * reports are ingested in round order, so the parked ``Server._pending``
+    payloads plus the buffers reproduce any in-flight aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+STATE_VERSION = 1
+
+
+def rng_state_dict(gen: np.random.Generator) -> Dict[str, Any]:
+    """Serializable bit-generator state of a numpy ``Generator``.
+
+    The returned dict is JSON-able as-is: PCG64's 128-bit state/inc words
+    are plain python ints, which ``ckpt.save_state`` round-trips at full
+    width (they do NOT fit a uint64 array leaf).
+    """
+    return gen.bit_generator.state
+
+
+def load_rng_state(gen: np.random.Generator, state: Dict[str, Any]) -> None:
+    """Restore a ``Generator`` in place from ``rng_state_dict`` output."""
+    gen.bit_generator.state = state
+
+
+def opt_array(x: Optional[np.ndarray], dtype=None) -> Optional[np.ndarray]:
+    """``None``-preserving ``np.asarray`` (mask/participant fields)."""
+    if x is None:
+        return None
+    return np.asarray(x) if dtype is None else np.asarray(x, dtype)
+
+
+def clients_state_dict(clients) -> Dict[str, Any]:
+    """Per-client mutable state, ordered by position in the client list.
+
+    The single engine checkpoint format: both engines emit it (the cohort
+    engine syncs its stacked/host-master state back to the ``Client``
+    objects first), so a checkpoint written under one engine restores
+    under any other — loop, cohort, mesh-sharded or waved.
+    """
+    from repro.checkpoint.ckpt import flatten_tree
+    return {"clients": [
+        {"cid": int(c.cid),
+         "params": flatten_tree(c.params),
+         "opt_state": flatten_tree(c.opt_state),
+         "rng": rng_state_dict(c.rng)}
+        for c in clients]}
+
+
+def load_clients_state_dict(clients, sd: Dict[str, Any]) -> None:
+    """Restore ``clients_state_dict`` output onto ``Client`` objects."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint.ckpt import unflatten_like
+    entries = sd["clients"]
+    if len(entries) != len(clients):
+        raise ValueError(
+            f"checkpoint holds {len(entries)} clients but the experiment "
+            f"built {len(clients)} — the FedConfig does not match")
+    for c, e in zip(clients, entries):
+        if int(e["cid"]) != int(c.cid):
+            raise ValueError(
+                f"client order mismatch: checkpoint cid {e['cid']} at "
+                f"position of client {c.cid}")
+        c.params = jax.tree.map(
+            jnp.asarray,
+            unflatten_like(e["params"], c.params,
+                           source=f"client {c.cid} params"))
+        c.opt_state = jax.tree.map(
+            jnp.asarray,
+            unflatten_like(e["opt_state"], c.opt_state,
+                           source=f"client {c.cid} opt_state"))
+        load_rng_state(c.rng, e["rng"])
+
+
+@dataclasses.dataclass
+class ExperimentState:
+    """One resumable snapshot of a federated run, at a phase boundary.
+
+    ``scheduler`` holds the node bookkeeping (pending/done node lists,
+    execution trace, per-node simulated finish times, the round window)
+    plus one payload dict per *in-flight* round — a round whose nodes are
+    only partially executed (overlap mode parks up to ``max_inflight`` of
+    these). ``server`` / ``timeline`` / ``engine`` are the per-layer
+    ``state_dict()`` outputs. ``logs`` carries the retired rounds'
+    ``RoundLog``s so a resumed service owns the full history.
+    """
+    version: int
+    round_mode: str
+    scheduler: Dict[str, Any]
+    timeline: Dict[str, Any]
+    server: Dict[str, Any]
+    engine: Dict[str, Any]
+    logs: List[Dict[str, Any]]
+
+    def to_tree(self) -> Dict[str, Any]:
+        """Plain nested-dict form for ``ckpt.save_state``."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_tree(cls, tree: Dict[str, Any]) -> "ExperimentState":
+        got = int(tree.get("version", -1))
+        if got != STATE_VERSION:
+            raise ValueError(
+                f"experiment-state version {got} is not the supported "
+                f"{STATE_VERSION} — this checkpoint was written by an "
+                "incompatible build")
+        return cls(**{f.name: tree[f.name]
+                      for f in dataclasses.fields(cls)})

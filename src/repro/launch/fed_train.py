@@ -2,6 +2,10 @@
 
 ``python -m repro.launch.fed_train --method edgefd --scenario strong \
       --dataset mnist_feat --rounds 10``
+
+The argparse → ``FedConfig`` mapping lives in ``add_config_args`` /
+``config_from_args`` so other drivers (``fed_serve``, the resumable
+service) expose the identical experiment surface.
 """
 from __future__ import annotations
 
@@ -12,9 +16,16 @@ from repro.common.types import FedConfig
 from repro.core.methods import METHODS
 from repro.fed import simulator
 
+# short labels for the per-phase wall-clock breakdown (RoundLog.phase_s)
+PHASE_ABBREV = {"local_train": "lt", "report": "rep",
+                "aggregate": "agg", "distill": "dist", "eval": "ev"}
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+
+def add_config_args(ap: argparse.ArgumentParser) -> None:
+    """Install every experiment-defining flag (the ``FedConfig`` surface).
+
+    Shared by ``fed_train`` and ``fed_serve`` so a service resumes the
+    exact experiment a batch run would execute."""
     ap.add_argument("--method", default="edgefd", choices=sorted(METHODS))
     ap.add_argument("--scenario", default="strong",
                     choices=["strong", "weak", "iid"])
@@ -92,6 +103,12 @@ def main(argv=None):
     ap.add_argument("--max-inflight", type=int, default=2,
                     help="overlap only: rounds concurrently in flight "
                          "(1 = lockstep)")
+    ap.add_argument("--max-pending-reports", type=int, default=0,
+                    help="admission/backpressure cap on client reports the "
+                         "server holds in flight across pending rounds; "
+                         "reports are admitted in simulated-arrival order "
+                         "and overflow clients drain through the staleness "
+                         "buffer like dropouts. 0 = unbounded (legacy)")
     ap.add_argument("--straggler-factor", type=float, default=4.0,
                     help="simulated straggler clock spread "
                          "(repro.fed.clock): per-client slowdowns drawn "
@@ -117,10 +134,11 @@ def main(argv=None):
     ap.add_argument("--n-train", type=int, default=5000)
     ap.add_argument("--n-test", type=int, default=1000)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--json", default="")
-    args = ap.parse_args(argv)
 
-    cfg = FedConfig(
+
+def config_from_args(args: argparse.Namespace) -> FedConfig:
+    """Build the ``FedConfig`` from ``add_config_args`` output."""
+    return FedConfig(
         num_clients=args.clients,
         rounds=args.rounds,
         method=args.method,
@@ -144,28 +162,39 @@ def main(argv=None):
         staleness_decay=args.staleness_decay,
         round_mode=args.round_mode,
         max_inflight=args.max_inflight,
+        max_pending_reports=args.max_pending_reports,
         straggler_factor=args.straggler_factor,
         kernel_backend=args.kernel_backend,
     )
 
-    # short labels for the per-phase wall-clock breakdown (RoundLog.phase_s)
-    phase_abbrev = {"local_train": "lt", "report": "rep",
-                    "aggregate": "agg", "distill": "dist", "eval": "ev"}
+
+def print_round(log, num_clients: int) -> None:
+    """One progress line per retired round (shared with ``fed_serve``)."""
+    extra = ""
+    if log.participants is not None:
+        extra = (f"  part={len(log.participants)}/{num_clients}"
+                 f"  stale={log.mean_staleness:.2f}")
+    if log.phase_s:
+        breakdown = " ".join(
+            f"{PHASE_ABBREV.get(k, k)}={v:.2f}"
+            for k, v in log.phase_s.items())
+        extra += (f"  sim={log.sim_finish_s:.2f}s"
+                  f"  age={log.served_model_age_s:.2f}s  [{breakdown}]")
+    print(f"round {log.round:3d}  acc={log.mean_acc:.4f}  "
+          f"id={log.id_fraction:.2f}  local={log.local_loss:.3f}  "
+          f"distill={log.distill_loss:.3f}  "
+          f"up={log.bytes_up/1e6:.1f}MB{extra}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    add_config_args(ap)
+    ap.add_argument("--json", default="")
+    args = ap.parse_args(argv)
+    cfg = config_from_args(args)
 
     def progress(log):
-        extra = ""
-        if log.participants is not None:
-            extra = (f"  part={len(log.participants)}/{args.clients}"
-                     f"  stale={log.mean_staleness:.2f}")
-        if log.phase_s:
-            breakdown = " ".join(
-                f"{phase_abbrev.get(k, k)}={v:.2f}"
-                for k, v in log.phase_s.items())
-            extra += f"  sim={log.sim_finish_s:.2f}s  [{breakdown}]"
-        print(f"round {log.round:3d}  acc={log.mean_acc:.4f}  "
-              f"id={log.id_fraction:.2f}  local={log.local_loss:.3f}  "
-              f"distill={log.distill_loss:.3f}  "
-              f"up={log.bytes_up/1e6:.1f}MB{extra}")
+        print_round(log, args.clients)
 
     res = simulator.run(cfg, args.dataset, n_train=args.n_train,
                         n_test=args.n_test, progress=progress)

@@ -1,0 +1,171 @@
+"""Checkpoint layer: atomic writes, retention, corruption fallback, and
+the nested-manifest experiment-state format (repro.checkpoint.ckpt)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (checkpoint_steps, latest_step,
+                              restore_checkpoint, restore_state,
+                              save_checkpoint, save_state)
+from repro.fed.state import load_rng_state, rng_state_dict
+
+
+def _ls(d):
+    return sorted(os.listdir(d))
+
+
+def test_atomic_write_leaves_no_orphans(tmp_path):
+    """The historical bug: np.savez handed a name without ``.npz``
+    silently appends one, so tmp files became ``ckpt_*.npz.tmp.npz``
+    orphans and the rename missed. The atomic writer must leave exactly
+    the final file."""
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 3, {"w": jnp.zeros((2,))})
+    assert _ls(d) == ["ckpt_00000003.npz"]
+    save_state(d, 4, {"x": np.arange(3)})
+    assert _ls(d) == ["ckpt_00000003.npz", "ckpt_00000004.npz"]
+
+
+def test_latest_step_sweeps_stale_tmp_files(tmp_path):
+    """A writer that died mid-save leaves ``ckpt_*.tmp*`` siblings; they
+    are never valid restore targets and latest_step deletes them."""
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 1, {"w": jnp.zeros(2)})
+    for orphan in ("ckpt_00000002.npz.tmp.npz", "ckpt_00000002.npz.tmp"):
+        with open(os.path.join(d, orphan), "wb") as f:
+            f.write(b"torn write")
+    assert latest_step(d) == 1
+    assert _ls(d) == ["ckpt_00000001.npz"]
+
+
+def test_latest_step_missing_dir(tmp_path):
+    assert latest_step(str(tmp_path / "nope")) is None
+    assert checkpoint_steps(str(tmp_path / "nope")) == []
+
+
+def test_retention_keeps_last_k(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in range(5):
+        save_checkpoint(d, s, {"w": jnp.zeros(2)}, keep_last=2)
+    assert checkpoint_steps(d) == [3, 4]
+    # state-format saves share the same retention
+    save_state(d, 5, {"x": 1}, keep_last=2)
+    assert checkpoint_steps(d) == [4, 5]
+
+
+def test_corrupt_checkpoint_falls_back_with_warning(tmp_path):
+    """A truncated newest file must not take the service down: restore
+    warns and steps back to the previous checkpoint."""
+    d = str(tmp_path / "ck")
+    save_state(d, 1, {"val": 10, "arr": np.arange(4)})
+    save_state(d, 2, {"val": 20, "arr": np.arange(4)})
+    path2 = os.path.join(d, "ckpt_00000002.npz")
+    with open(path2, "r+b") as f:  # tear the zip central directory
+        f.truncate(os.path.getsize(path2) // 2)
+    with pytest.warns(UserWarning, match="unreadable"):
+        state = restore_state(d, 2, fallback=True)
+    assert state["val"] == 10
+    np.testing.assert_array_equal(state["arr"], np.arange(4))
+    with pytest.raises(Exception):
+        restore_state(d, 2, fallback=False)
+
+
+def test_corrupt_pytree_checkpoint_falls_back(tmp_path):
+    d = str(tmp_path / "ck")
+    like = {"w": jnp.zeros(3)}
+    save_checkpoint(d, 1, {"w": jnp.arange(3.0)})
+    save_checkpoint(d, 2, {"w": jnp.arange(3.0) * 2})
+    with open(os.path.join(d, "ckpt_00000002.npz"), "wb") as f:
+        f.write(b"not a zip at all")
+    with pytest.warns(UserWarning, match="unreadable"):
+        out = restore_checkpoint(d, 2, like, fallback=True)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(3.0))
+
+
+def test_save_state_roundtrips_nonarray_leaves(tmp_path):
+    """The resume path carries ints beyond 64 bits (PCG64 words), None,
+    bools, strs, nested lists and mixed arrays — all must round-trip
+    exactly, with array dtypes preserved."""
+    d = str(tmp_path / "ck")
+    gen = np.random.default_rng(7)
+    gen.standard_normal(13)  # advance so the state is nontrivial
+    state = {
+        "version": 1,
+        "cursors": {"round": 42, "edge": [0, 3, None]},
+        "big": (1 << 100) + 12345,  # wider than any numpy integer
+        "flags": [True, False, None, "sync", 2.5],
+        "mask": np.array([True, False, True]),
+        "f32": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "i64": np.arange(4, dtype=np.int64),
+        "jax": jnp.ones((2, 2)),
+        "rng": rng_state_dict(gen),
+        "empty": [],
+    }
+    save_state(d, 0, state)
+    out = restore_state(d)
+    assert out["version"] == 1 and out["cursors"] == state["cursors"]
+    assert out["big"] == state["big"]
+    assert out["flags"] == state["flags"]
+    assert out["empty"] == []
+    for k in ("mask", "f32", "i64"):
+        np.testing.assert_array_equal(out[k], state[k])
+        assert out[k].dtype == np.asarray(state[k]).dtype
+    np.testing.assert_array_equal(out["jax"], np.ones((2, 2)))
+    # restored rng state drives a generator to identical draws
+    gen2 = np.random.default_rng(0)
+    load_rng_state(gen2, out["rng"])
+    np.testing.assert_array_equal(gen.standard_normal(5),
+                                  gen2.standard_normal(5))
+
+
+def test_save_state_rejects_bad_structures(tmp_path):
+    d = str(tmp_path / "ck")
+    with pytest.raises(TypeError, match="keys must be str"):
+        save_state(d, 0, {1: "int key"})
+    with pytest.raises(TypeError, match="reserved"):
+        save_state(d, 0, {"__npz__": "reserved key"})
+    with pytest.raises(TypeError, match="unserializable"):
+        save_state(d, 0, {"bad": object()})
+
+
+def test_restore_state_on_pytree_checkpoint_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 0, {"w": jnp.zeros(2)})
+    with pytest.raises(KeyError, match="manifest"):
+        restore_state(d, 0)
+
+
+def test_shape_mismatch_message_names_leaf_and_shapes(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 0, {"layer": {"w": jnp.zeros((2, 4))}})
+    with pytest.raises(ValueError) as ei:
+        restore_checkpoint(d, 0, {"layer": {"w": jnp.zeros((3, 4))}})
+    msg = str(ei.value)
+    assert "shape mismatch" in msg and "layer/w" in msg
+    assert "(2, 4)" in msg and "(3, 4)" in msg
+
+
+def test_missing_leaf_raises_keyerror(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 0, {"a": jnp.zeros(2)})
+    with pytest.raises(KeyError, match="missing leaf"):
+        restore_checkpoint(d, 0, {"a": jnp.zeros(2), "b": jnp.zeros(2)})
+
+
+def test_restore_with_shardings_device_puts(tmp_path):
+    """Restore-time resharding: leaves are device_put onto the supplied
+    sharding (a 1-device mesh here; the forced-4-device path is covered
+    by the mesh resume subprocess test)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+    d = str(tmp_path / "ck")
+    tree = {"w": jnp.arange(8.0)}
+    save_checkpoint(d, 0, tree)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("clients",))
+    sh = {"w": NamedSharding(mesh, PartitionSpec())}
+    out = restore_checkpoint(d, 0, jax.tree.map(jnp.zeros_like, tree), sh)
+    assert isinstance(out["w"], jax.Array)
+    assert out["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(8.0))
