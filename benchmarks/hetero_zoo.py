@@ -1,0 +1,275 @@
+"""Heterogeneous-zoo scheduling + FedDF ensemble server benchmark.
+
+Two claims, one result file (``BENCH_hetero.json`` at the repo root):
+
+* **Schedule** — on a mixed model zoo (three MLP width cohorts, cohort
+  engine) with anti-correlated per-cohort phase costs (the wide cohort is
+  slow to train, the narrow cohort slow to distill), per-cohort phase
+  nodes (``concurrent_cohorts=True``) beat the serial phase graph on the
+  simulated straggler clock: serial pays sum-over-phases of the slowest
+  cohort (every phase barriers the fleet), concurrent pays roughly the
+  slowest single cohort chain (cohorts only meet at aggregate). Both
+  graphs run ``round_mode="sync"`` and produce bit-identical numerics, so
+  the comparison is pure makespan.
+
+* **Accuracy** — the FedDF-style ensemble server (``method=
+  "server_distill"``) trains a central student on unlabeled proxy data
+  against the masked/weighted client ensemble; its test accuracy must
+  hold within ``ACC_TOL`` of the masked-mean fedmd baseline's mean client
+  accuracy on the same mixed zoo.
+
+    PYTHONPATH=src:. python benchmarks/hetero_zoo.py          # C=30
+    PYTHONPATH=src:. python benchmarks/hetero_zoo.py --quick  # CI scale
+
+``--parse FILE`` re-validates a result file (concurrent strictly beats
+serial on simulated throughput, student accuracy within tolerance) and
+exits non-zero on regression — CI's bench-smoke job runs the quick
+benchmark and then this gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+ACC_TOL = 0.05  # student_acc >= fedmd_mean_client_acc - ACC_TOL gate
+SAMPLES_PER_CLIENT = 64
+MLP_HIDDEN = (32,)  # mixed zoo widens/narrows around this stack
+SERVER_DISTILL_EPOCHS = 16  # FedDF central-student steps per round
+
+# deterministic per-cohort phase costs (simulated seconds of edge work,
+# divided across the cohort's parallel client lanes). Keys follow the
+# scheduler's "phase@cohort" convention; cohorts are cid % 3 under the
+# mixed zoo. Costs are anti-correlated on purpose: cohort 0 (configured
+# width) is slow to train, cohort 2 (double width) slow to distill, so a
+# serial graph pays max(train) + max(distill) while concurrent cohorts
+# pay max(train + distill) per chain.
+FIXED_COSTS = {
+    "local_train@0": 3.0,
+    "local_train@1": 1.0,
+    "local_train@2": 0.5,
+    "report@0": 0.1,
+    "report@1": 0.1,
+    "report@2": 0.1,
+    "aggregate": 0.3,
+    "distill@0": 0.5,
+    "distill@1": 1.0,
+    "distill@2": 3.0,
+    "eval": 0.0,
+}
+
+
+def _config(clients, rounds, method, *, concurrent, seed=0):
+    from repro.common.types import FedConfig
+
+    return FedConfig(
+        num_clients=clients,
+        rounds=rounds,
+        method=method,
+        scenario="iid",
+        proxy_batch=256,
+        batch_size=32,
+        lr=1e-2,
+        seed=seed,
+        engine="cohort",
+        zoo="mixed",
+        round_mode="sync",
+        straggler_factor=1.0,
+        concurrent_cohorts=concurrent,
+        server_distill_epochs=SERVER_DISTILL_EPOCHS,
+    )
+
+
+def bench_schedule(*, clients: int, rounds: int, concurrent: bool, seed: int = 0) -> dict:
+    """One mixed-zoo run priced on the simulated timeline; sync mode, so
+    serial and concurrent produce identical numerics and the makespan is
+    the only thing that moves."""
+    import jax
+
+    from repro.core.methods import get_method
+    from repro.fed import simulator
+    from repro.fed.scheduler import RoundScheduler
+
+    cfg = _config(clients, rounds, "fedmd", concurrent=concurrent, seed=seed)
+    clients_list, server, x_test, y_test = simulator.build_experiment(
+        cfg,
+        "mnist_feat",
+        n_train=SAMPLES_PER_CLIENT * clients,
+        n_test=512,
+        mlp_hidden=MLP_HIDDEN,
+    )
+    eng = simulator.build_engine(clients_list, cfg)
+    eng.learn_dres(jax.random.PRNGKey(cfg.seed))
+    sched = RoundScheduler(
+        eng,
+        server,
+        get_method(cfg.method),
+        cfg,
+        x_test,
+        y_test,
+        sim_phase_costs=FIXED_COSTS,
+    )
+    t0 = time.perf_counter()
+    logs = sched.run_rounds(0, cfg.rounds)
+    wall_total = time.perf_counter() - t0
+    sim_total = max(log.sim_finish_s for log in logs)
+    return {
+        "graph": "concurrent" if concurrent else "serial",
+        "clients": clients,
+        "rounds": rounds,
+        "cohorts": len(eng.cohort_positions()),
+        "sim_total_s": sim_total,
+        "sim_round_s": sim_total / rounds,
+        "sim_throughput_rps": rounds / sim_total,
+        "wall_total_s": wall_total,
+        "final_acc": logs[-1].mean_acc,
+    }
+
+
+def bench_accuracy(*, clients: int, rounds: int, seed: int = 0) -> dict:
+    """fedmd masked-mean baseline vs the FedDF ensemble-server student on
+    the same mixed zoo and data."""
+    from repro.fed import simulator
+
+    n_train = SAMPLES_PER_CLIENT * clients
+    base = simulator.run(
+        _config(clients, rounds, "fedmd", concurrent=False, seed=seed),
+        "mnist_feat",
+        n_train=n_train,
+        n_test=512,
+    )
+    dist = simulator.run(
+        _config(clients, rounds, "server_distill", concurrent=False, seed=seed),
+        "mnist_feat",
+        n_train=n_train,
+        n_test=512,
+    )
+    student = dist.rounds[-1].server_student_acc
+    return {
+        "clients": clients,
+        "rounds": rounds,
+        "baseline_acc": base.final_acc,
+        "student_acc": student,
+        "client_acc_under_server_distill": dist.final_acc,
+    }
+
+
+def run_and_save(quick: bool = False, out: str | None = None) -> dict:
+    clients = 6 if quick else 30
+    rounds = 3 if quick else 10
+    rows = []
+    print(f"{'graph':>11} {'C':>4} {'rounds':>7} {'sim_total_s':>12} {'rps':>8}")
+    for concurrent in (False, True):
+        row = bench_schedule(clients=clients, rounds=rounds, concurrent=concurrent)
+        rows.append(row)
+        print(
+            f"{row['graph']:>11} {clients:>4} {rounds:>7} "
+            f"{row['sim_total_s']:12.2f} {row['sim_throughput_rps']:8.3f}"
+        )
+    ratio = rows[1]["sim_throughput_rps"] / rows[0]["sim_throughput_rps"]
+    print(f"concurrent/serial simulated throughput: {ratio:.2f}x")
+    if rows[0]["final_acc"] != rows[1]["final_acc"]:
+        raise SystemExit(
+            "serial and concurrent sync runs must be numerically identical, "
+            f"got {rows[0]['final_acc']} vs {rows[1]['final_acc']}"
+        )
+    acc = bench_accuracy(clients=clients, rounds=rounds)
+    print(
+        f"fedmd baseline acc={acc['baseline_acc']:.4f}  "
+        f"FedDF student acc={acc['student_acc']:.4f}"
+    )
+    out = out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_hetero.json",
+    )
+    data = {
+        "benchmark": "hetero_zoo",
+        "host_cpu_count": os.cpu_count(),
+        "acc_tol": ACC_TOL,
+        "note": (
+            "mixed MLP zoo (three width cohorts) on the simulated "
+            "straggler clock: per-cohort phase nodes vs the serial phase "
+            "graph under anti-correlated per-cohort costs, plus the FedDF "
+            "ensemble-server student vs the masked-mean fedmd baseline"
+        ),
+        "fixed_costs": FIXED_COSTS,
+        "schedule": rows,
+        "accuracy": acc,
+    }
+    with open(out, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"saved {out}")
+    return data
+
+
+def parse_check(path: str) -> None:
+    """Regression gate: concurrent strictly beats serial on simulated
+    throughput with identical numerics, and the ensemble-server student
+    holds within tolerance of the fedmd baseline."""
+    with open(path) as f:
+        data = json.load(f)
+    rows = {r["graph"]: r for r in data["schedule"]}
+    if set(rows) != {"serial", "concurrent"}:
+        raise SystemExit(f"{path}: need one serial and one concurrent row, got {sorted(rows)}")
+    for r in rows.values():
+        if not (r["sim_total_s"] > 0 and r["wall_total_s"] > 0):
+            raise SystemExit(f"{path}: non-positive timing in {r}")
+        if not 0.0 <= r["final_acc"] <= 1.0:
+            raise SystemExit(f"{path}: final_acc out of [0, 1] in {r}")
+    if rows["serial"]["final_acc"] != rows["concurrent"]["final_acc"]:
+        raise SystemExit(
+            f"{path}: sync-mode serial and concurrent accs must match "
+            f"bit-for-bit, got {rows['serial']['final_acc']} vs "
+            f"{rows['concurrent']['final_acc']}"
+        )
+    ratio = rows["concurrent"]["sim_throughput_rps"] / rows["serial"]["sim_throughput_rps"]
+    if ratio <= 1.0:
+        raise SystemExit(
+            f"{path}: concurrent cohorts must beat the serial graph on "
+            f"simulated throughput, got {ratio:.3f}x"
+        )
+    acc = data["accuracy"]
+    tol = data.get("acc_tol", ACC_TOL)
+    if acc["student_acc"] is None:
+        raise SystemExit(f"{path}: missing server_student_acc")
+    if acc["student_acc"] < acc["baseline_acc"] - tol:
+        raise SystemExit(
+            f"{path}: FedDF student acc {acc['student_acc']:.4f} fell more "
+            f"than {tol} below the fedmd baseline {acc['baseline_acc']:.4f}"
+        )
+    print(
+        f"{path}: OK — concurrent {ratio:.2f}x serial throughput, student "
+        f"{acc['student_acc']:.4f} vs baseline {acc['baseline_acc']:.4f} "
+        f"(tol {tol})"
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="CI scale: C=6, 3 rounds (default C=30, 10)",
+    )
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="output path (default <repo>/BENCH_hetero.json)",
+    )
+    ap.add_argument(
+        "--parse",
+        default=None,
+        metavar="FILE",
+        help="validate a previously written result file and exit (CI gate)",
+    )
+    args = ap.parse_args(argv)
+    if args.parse:
+        parse_check(args.parse)
+        return {}
+    return run_and_save(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

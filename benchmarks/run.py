@@ -8,8 +8,44 @@ Prints ``name,us_per_call,derived`` CSV rows as each benchmark emits them.
 from __future__ import annotations
 
 import argparse
-import sys
+import os
+import re
 import time
+
+# every repo-root BENCH_* artifact and the registry job that writes it.
+# ``_check_writers_registered`` scans benchmarks/*.py for BENCH_*.json
+# mentions and fails if a writer exists that no registry job covers — a
+# new benchmark must be wired here in the same PR that adds it.
+BENCH_WRITERS = {
+    "BENCH_kernels.json": "kernels",
+    "BENCH_async.json": "async",
+    "BENCH_serve.json": "serve",
+    "BENCH_hetero.json": "hetero",
+    "BENCH_scale.json": "scale",
+    "BENCH_cohort_mesh.json": "mesh",
+    "BENCH_participation.json": "participation",
+}
+
+
+def _check_writers_registered(job_names) -> None:
+    bench_dir = os.path.dirname(os.path.abspath(__file__))
+    mentioned = set()
+    for fn in sorted(os.listdir(bench_dir)):
+        if not fn.endswith(".py"):
+            continue
+        with open(os.path.join(bench_dir, fn)) as f:
+            mentioned |= set(re.findall(r"BENCH_\w+\.json", f.read()))
+    unregistered = sorted(mentioned - set(BENCH_WRITERS))
+    if unregistered:
+        raise SystemExit(
+            f"benchmarks write {unregistered} but no registry job covers "
+            "them — add entries to BENCH_WRITERS and jobs in run.py")
+    missing = sorted(j for j in BENCH_WRITERS.values()
+                     if j not in job_names)
+    if missing:
+        raise SystemExit(
+            f"BENCH_WRITERS names jobs {missing} that run.py does not "
+            "define")
 
 
 def main(argv=None) -> None:
@@ -17,13 +53,14 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: table3,fig2,table4,fig5,kernels,"
-                         "async,serve")
+                         "async,serve,hetero,scale,mesh,participation")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (async_rounds, fig2_dre_cost, fig5_sweeps,
-                            kernel_bench, serve_resume, table3_accuracy,
+    from benchmarks import (async_rounds, cohort_scaling, fig2_dre_cost,
+                            fig5_sweeps, hetero_zoo, kernel_bench, scale,
+                            serve_resume, table3_accuracy,
                             table4_complexity)
 
     jobs = [
@@ -36,6 +73,23 @@ def main(argv=None) -> None:
         # serve records the resumable service's checkpoint overhead per
         # round + restore latency to the repo-root BENCH_serve.json
         ("serve", lambda: serve_resume.run_and_save(quick=quick)),
+        # hetero records concurrent-cohort vs serial scheduling on the
+        # mixed zoo + the FedDF ensemble-server student accuracy to the
+        # repo-root BENCH_hetero.json
+        ("hetero", lambda: hetero_zoo.run_and_save(quick=quick)),
+        # scale records wave-streaming / two-tier memory-boundedness rows
+        # to the repo-root BENCH_scale.json (per-row subprocesses)
+        ("scale", lambda: scale.main(["--quick"] if quick else [])),
+        # mesh records the emulated-device sweep of the sharded cohort
+        # engine to the repo-root BENCH_cohort_mesh.json
+        ("mesh", lambda: cohort_scaling.main(
+            ["--devices", "1", "2"] if quick else
+            ["--devices", "1", "2", "4", "8"])),
+        # participation records the participation-fraction sweep on both
+        # engines to the repo-root BENCH_participation.json
+        ("participation", lambda: cohort_scaling.main(
+            ["--fractions", "0.5", "1.0"] + (["--clients", "8"]
+                                             if quick else []))),
         ("fig2", lambda: fig2_dre_cost.run(
             sizes=(256, 512, 1024) if quick else (256, 512, 1024, 2048, 4096))),
         ("table4", lambda: table4_complexity.run(quick=quick)),
@@ -57,6 +111,7 @@ def main(argv=None) -> None:
                               n_train=1500 if quick else 4000,
                               n_test=400 if quick else 800))),
     ]
+    _check_writers_registered([name for name, _ in jobs])
     print("name,us_per_call,derived")
     for name, job in jobs:
         if only and name not in only:

@@ -9,13 +9,33 @@ from repro.fed import simulator
 cfg = FedConfig(
     num_clients=5,
     rounds=5,
-    method="edgefd",          # try: fedmd, selective-fd, fkd, indlearn
+    method="edgefd",          # try: fedmd, selective-fd, fkd, indlearn —
+                              # or server_distill, which adds a FedDF-style
+                              # server_distill phase training a central
+                              # server student on the unlabeled proxy batch
+                              # against the masked client ensemble
+                              # (log.server_student_acc tracks it;
+                              # server_distill_epochs sets its step budget)
     scenario="strong",        # strong | weak | iid
     proxy_fraction=0.2,       # alpha — share 20% of private data as proxy
     proxy_batch=300,          # |I_r| proxy samples per round
     id_threshold=None,        # None => per-client quantile calibration
     lr=1e-2,
     engine="cohort",          # vmapped clients; "loop" = same results, 1-by-1
+    # Model zoo (repro.fed.simulator): "shared" gives every client the
+    # same MLP (one cohort, the historical default); "mixed" cycles three
+    # width variants over clients (cid % 3), so the cohort engine runs
+    # three architecture cohorts — the system-heterogeneity regime. With
+    # concurrent_cohorts=True the scheduler splits each client phase into
+    # per-cohort nodes: a fast cohort's round r+1 training overlaps a slow
+    # cohort's round r distill on the simulated clock, with numerics
+    # identical to the serial graph (benchmarks/hetero_zoo.py measures
+    # 1.33x simulated throughput on anti-correlated per-cohort costs).
+    # The CLI spells it
+    #   python -m repro.launch.fed_train --zoo mixed --concurrent-cohorts
+    # "auto" = shared unless the REPRO_ZOO env var says otherwise.
+    zoo="auto",
+    concurrent_cohorts=False,
     # num_devices=-1 shards the cohort client axis over a 1-D device mesh
     # (all visible jax devices; 0 = unsharded). Same round logs, one
     # device-parallel call per phase. The CLI spells it

@@ -130,6 +130,10 @@ class FedConfig:
     rounds: int = 20
     local_epochs: int = 1
     distill_epochs: int = 1
+    # server-side student epochs per ensemble-distillation round
+    # (method="server_distill" only); 0 = same as distill_epochs. FedDF
+    # typically runs the central student many more steps than client KD.
+    server_distill_epochs: int = 0
     proxy_fraction: float = 0.2      # alpha — fraction of private data shared
     proxy_batch: int = 256           # |I_r| proxy indices per round
     id_threshold: Optional[float] = None  # T^ID; None = per-client calibration
@@ -232,3 +236,20 @@ class FedConfig:
     # vehicle, not a fast path); "jnp" forces the reference code, which on
     # CPU is bit-for-bit the pre-dispatch behavior.
     kernel_backend: str = "auto"
+    # client model zoo (repro.fed.simulator.build_experiment): "shared"
+    # gives every client the same architecture (one cohort — the legacy
+    # feature-mode zoo), "mixed" cycles a small set of MLP width variants
+    # across clients so the cohort engine sees a genuinely heterogeneous
+    # zoo (image mode is always per-client heterogeneous and ignores this
+    # knob). "auto" (default) = shared unless the REPRO_ZOO env var says
+    # otherwise (same pattern as REPRO_KERNEL_BACKEND/REPRO_ROUND_MODE).
+    zoo: str = "auto"
+    # concurrent-cohort scheduling (repro.fed.scheduler): when True, the
+    # phase graph keys client-side phase nodes (local_train/report/distill)
+    # per cohort, so different cohorts' phases interleave within and across
+    # rounds — cohort A distills round r while cohort B already trains
+    # round r+1 on the simulated straggler clock. Aggregation stays a
+    # global barrier (the protocol needs every cohort's report). With a
+    # single cohort this reproduces the serial schedule bit-for-bit; the
+    # default False keeps the engine-wide phase nodes.
+    concurrent_cohorts: bool = False

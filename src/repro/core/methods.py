@@ -30,6 +30,7 @@ class Method:
     data_free: bool = False           # FKD / PLS
     count_weighted: bool = False      # PLS: weight class means by counts
     distill_loss: str = "kl"          # kl | mse
+    server_distill: bool = False      # FedDF: server-side ensemble student
 
     def make_dre(self, *, num_centroids: int, threshold: Optional[float],
                  kulsif_threshold: float = 0.05, num_aux: int = 256,
@@ -52,9 +53,17 @@ PLS = Method(name="pls", data_free=True, count_weighted=True)
 SELECTIVE_FD = Method(name="selective-fd", client_filter="kulsif",
                       server_filter=True)
 INDLEARN = Method(name="indlearn")                             # no collaboration
+# FedDF-style ensemble distillation: clients exchange plain ensemble logits
+# (like fedmd), and the server additionally trains a central student on the
+# unlabeled proxy data against the masked/weighted ensemble teacher — the
+# standard fusion recipe for model-heterogeneous zoos (Lin et al., FedDF).
+# The student rides a dedicated `server_distill` phase node between
+# aggregate and distill (repro.fed.scheduler) on the serial server lane.
+SERVER_DISTILL = Method(name="server_distill", server_distill=True)
 
 METHODS = {m.name: m for m in
-           (EDGEFD, FEDMD, FEDED, DSFL, FKD, PLS, SELECTIVE_FD, INDLEARN)}
+           (EDGEFD, FEDMD, FEDED, DSFL, FKD, PLS, SELECTIVE_FD, INDLEARN,
+            SERVER_DISTILL)}
 
 
 def get_method(name: str) -> Method:

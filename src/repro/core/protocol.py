@@ -78,6 +78,11 @@ class RoundLog:
     # Overlap mode retires rounds faster than lockstep, so this is the
     # serving-facing win of the pipelined scheduler (launch/fed_serve.py).
     served_model_age_s: float = 0.0
+    # FedDF-style ensemble server (method="server_distill"): the server
+    # student's mean KD loss on the proxy batch this round, and its test
+    # accuracy measured at the eval phase (None = no student attached)
+    server_distill_loss: float = 0.0
+    server_student_acc: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -194,6 +199,81 @@ class LoopEngine:
 
     def phase_eval(self, x_test, y_test) -> List[float]:
         return [c.evaluate(x_test, y_test) for c in self.clients]
+
+    # ------------------------------------------------ per-cohort entry points
+    # Concurrent-cohort scheduling (repro.fed.scheduler with
+    # cfg.concurrent_cohorts=True) keys client-side phase nodes per cohort
+    # and drives each group independently. The loop engine groups clients
+    # by arch_key exactly like CohortEngine so loop == cohort round-log
+    # parity holds node-for-node; every cohort_* call returns values
+    # aligned to that cohort's client positions and the scheduler scatters
+    # them back into fleet-length structures.
+
+    def cohort_positions(self) -> List[np.ndarray]:
+        """Client positions per cohort, grouped by ``arch_key`` in first-
+        appearance order (clients without an arch_key are singletons) —
+        the same grouping rule as ``CohortEngine``."""
+        if getattr(self, "_cohort_pos", None) is None:
+            groups: Dict = {}
+            for pos, c in enumerate(self.clients):
+                key = c.arch_key if c.arch_key is not None else ("solo", pos)
+                groups.setdefault(key, []).append(pos)
+            self._cohort_pos = [np.asarray(p, int) for p in groups.values()]
+        return self._cohort_pos
+
+    def cohort_local_train(self, ci: int, epochs: int, batch_size: int,
+                           participants=None) -> List[float]:
+        part = self._part(participants)
+        return [self.clients[p].local_train(epochs, batch_size)
+                if part[p] else 0.0
+                for p in self.cohort_positions()[ci]]
+
+    def cohort_classwise_report(self, ci: int, participants=None):
+        part = self._part(participants)
+        k = self.clients[0].num_classes
+        skipped = (np.zeros((k, k), np.float32), np.zeros((k,), np.float32))
+        return [self.clients[p].classwise_means() if part[p] else skipped
+                for p in self.cohort_positions()[ci]]
+
+    def cohort_report(self, ci: int, px, powner, participants=None):
+        """Returns (logits (m, t, K), masks (m, t)) for cohort ``ci``'s m
+        clients; sampled-out rows stay zero/False like ``phase_report``."""
+        part = self._part(participants)
+        pos = self.cohort_positions()[ci]
+        t = len(px)
+        k = self.clients[0].num_classes
+        logits = np.zeros((len(pos), t, k), np.float32)
+        masks = np.zeros((len(pos), t), bool)
+        for j, p in enumerate(pos):
+            if not part[p]:
+                continue
+            c = self.clients[p]
+            logits[j] = np.asarray(c.proxy_logits(px))
+            masks[j] = np.asarray(c.filter_mask(px, powner).mask)
+        return logits, masks
+
+    def cohort_distill(self, ci: int, px, teacher, weight, epochs: int,
+                       batch_size: int, participants=None) -> List[float]:
+        part = self._part(participants)
+        return [self.clients[p].distill(px, teacher, weight, epochs,
+                                        batch_size)
+                if part[p] else 0.0
+                for p in self.cohort_positions()[ci]]
+
+    def cohort_distill_private(self, ci: int, teacher_by_class,
+                               valid_by_class, epochs: int, batch_size: int,
+                               participants=None) -> List[float]:
+        part = self._part(participants)
+        out = []
+        for p in self.cohort_positions()[ci]:
+            c = self.clients[p]
+            if not part[p]:
+                out.append(0.0)
+                continue
+            teacher = teacher_by_class[c.y]                # (n, K)
+            w = valid_by_class[c.y].astype(np.float32)
+            out.append(c.distill(c.x, teacher, w, epochs, batch_size))
+        return out
 
     # ------------------------------------------------- resumable service
     def state_dict(self) -> Dict:

@@ -315,7 +315,11 @@ class SimTimeline:
         time)`` and takes ``base_s * speed[c]``. Returns the barrier
         (latest finish); with no participants the phase completes at
         ``ready_s``. ``offsets`` (C,) are per-client arrival delays
-        (``arrival_offsets``); ``None`` = everyone ready at ``ready_s``."""
+        (``arrival_offsets``); ``None`` = everyone ready at ``ready_s``.
+        ``base_s`` may also be a (C,) array of per-client base costs
+        (heterogeneous-zoo pricing: each cohort's architecture has its own
+        phase cost — see the ``"phase@cohort"`` keys of
+        ``RoundScheduler.sim_phase_costs``)."""
         if participants is None:
             ids = slice(None)
         else:
@@ -324,7 +328,8 @@ class SimTimeline:
                 return ready_s
         ready = ready_s if offsets is None else ready_s + offsets[ids]
         start = np.maximum(ready, self.client_free[ids])
-        finish = start + base_s * self.speeds[ids]
+        base = np.asarray(base_s)[ids] if np.ndim(base_s) else base_s
+        finish = start + base * self.speeds[ids]
         self.client_free[ids] = finish
         return float(max(ready_s, finish.max())) if finish.size else ready_s
 

@@ -1062,6 +1062,51 @@ class CohortEngine:
         return self._scatter([c.evaluate(x_test, y_test)
                               for c in self.cohorts])
 
+    # ------------------------------------------------ per-cohort entry points
+    # Concurrent-cohort scheduling (repro.fed.scheduler with
+    # cfg.concurrent_cohorts=True) drives each _Cohort independently so
+    # different cohorts' phases interleave on the round graph. Each call
+    # returns values aligned to that cohort's client positions
+    # (``cohort_positions()[ci]``); the scheduler scatters them back into
+    # fleet-length structures. LoopEngine implements the same interface
+    # with the same grouping rule, so loop == cohort parity holds
+    # node-for-node.
+
+    def cohort_positions(self) -> List[np.ndarray]:
+        return [np.asarray(c.positions, int) for c in self.cohorts]
+
+    def cohort_local_train(self, ci: int, epochs: int, batch_size: int,
+                           participants=None) -> List[float]:
+        c = self.cohorts[ci]
+        return c.local_train(epochs, batch_size,
+                             part=self._part_for(c, participants))
+
+    def cohort_classwise_report(self, ci: int, participants=None):
+        c = self.cohorts[ci]
+        return c.classwise_means(part=self._part_for(c, participants))
+
+    def cohort_report(self, ci: int, px, powner, participants=None):
+        """Returns (logits (m, t, K), masks (m, t)) for cohort ``ci``."""
+        c = self.cohorts[ci]
+        part = self._part_for(c, participants)
+        logits = np.asarray(c.proxy_logits(px, part=part), np.float32)
+        masks = np.asarray(c.filter_masks(px, powner, part=part), bool)
+        return logits, masks
+
+    def cohort_distill(self, ci: int, px, teacher, weight, epochs: int,
+                       batch_size: int, participants=None) -> List[float]:
+        c = self.cohorts[ci]
+        return c.distill(px, teacher, weight, epochs, batch_size,
+                         part=self._part_for(c, participants))
+
+    def cohort_distill_private(self, ci: int, teacher_by_class,
+                               valid_by_class, epochs: int, batch_size: int,
+                               participants=None) -> List[float]:
+        c = self.cohorts[ci]
+        return c.distill_private(teacher_by_class, valid_by_class, epochs,
+                                 batch_size,
+                                 part=self._part_for(c, participants))
+
     # -------------------------- historical mega-call names (thin aliases)
     def local_train_all(self, epochs: int, batch_size: int,
                         participants=None) -> List[float]:

@@ -49,6 +49,26 @@ a single host (``BENCH_async.json``).
 ``REPRO_KERNEL_BACKEND`` does for the kernel dispatch layer — a CI
 vehicle for running the whole test suite through the overlap scheduler.
 Explicit ``sync``/``overlap`` always win over the env var.
+
+Two extensions ride the same graph:
+
+**Concurrent cohorts** (``FedConfig.concurrent_cohorts=True``): client-side
+phase nodes (``local_train``/``report``/``distill``) are keyed per cohort —
+``(phase, round, cohort)`` — so a heterogeneous zoo's cohorts pipeline
+independently: cohort A distills round ``r`` while cohort B already trains
+round ``r+1`` on the simulated timeline (admission is per cohort:
+``local_train(r, c)`` waits on ``distill(r - max_inflight, c)`` of *its own*
+cohort, with host-order edges keeping execution deterministic and
+bit-for-bit the serial schedule when only one cohort exists). Aggregation
+stays a global barrier — the protocol needs every cohort's report — so the
+win is cross-round desynchronization, measurable with per-cohort phase
+costs (``sim_phase_costs["phase@cohort"]``, ``benchmarks/hetero_zoo.py``).
+
+**FedDF ensemble server** (``method="server_distill"``): a ``server_distill``
+phase node between ``aggregate`` and ``distill`` trains the server's central
+student against the masked/weighted ensemble teacher
+(``Server.ensemble_distill``), priced on the serial server lane and
+checkpointable like every other phase.
 """
 from __future__ import annotations
 
@@ -132,6 +152,11 @@ def round_phases(method) -> Tuple[str, ...]:
     """The phase nodes one round of ``method`` contributes to the graph."""
     if method.name == "indlearn":  # no collaboration: train, then measure
         return ("local_train", "eval")
+    if getattr(method, "server_distill", False):
+        # FedDF: the server student trains on the fused teacher before the
+        # clients distill — a serial server-lane node riding the graph
+        return ("local_train", "report", "aggregate", "server_distill",
+                "distill", "eval")
     return PHASE_ORDER
 
 
@@ -150,7 +175,9 @@ class _RoundState:
                  "teacher", "valid", "teacher_by_class", "valid_by_class",
                  "local_losses", "distill_losses", "id_frac",
                  "mean_staleness", "accs", "phase_s", "sim_finish_s",
-                 "report_payload")
+                 "report_payload", "rpart", "sampled", "reports_pending",
+                 "report_logits", "report_masks", "report_arrival",
+                 "server_distill_loss", "server_student_acc")
 
     def __init__(self, r: int):
         self.r = r
@@ -176,6 +203,27 @@ class _RoundState:
         # post-pricing ingest event; consumed within the same node
         # execution, so never present at a phase boundary
         self.report_payload = None
+        # --- concurrent-cohort bookkeeping (serial mode leaves these at
+        # their defaults). The round's *reporting* participants: training
+        # participation (st.part) minus mid-round dropout and admission
+        # overflow — serial mode mutates st.part in place instead, but with
+        # per-cohort nodes a later cohort's local_train may still need the
+        # pre-dropout mask. None = same as st.part.
+        self.rpart = None
+        self.sampled = False        # participation drawn for this round?
+        # per-cohort report accumulation: cohort report nodes fill their
+        # rows here; ingestion fires at the round's last report node. These
+        # DO live across phase boundaries, so they are checkpointed.
+        self.reports_pending = None
+        self.report_logits = None
+        self.report_masks = None
+        # per-client simulated report-arrival times, captured when each
+        # report node is priced (later nodes may advance the lanes before
+        # the round ingests, so arrival order must be pinned at pricing)
+        self.report_arrival = None
+        # FedDF ensemble server (method="server_distill")
+        self.server_distill_loss = 0.0
+        self.server_student_acc = None
 
     def state_dict(self) -> Dict:
         """Mutable payload of a partially-executed (in-flight) round.
@@ -205,6 +253,16 @@ class _RoundState:
                      else [float(a) for a in self.accs]),
             "phase_s": {k: float(v) for k, v in self.phase_s.items()},
             "sim_finish_s": float(self.sim_finish_s),
+            "rpart": opt_array(self.rpart, bool),
+            "sampled": bool(self.sampled),
+            "reports_pending": (None if self.reports_pending is None
+                                else int(self.reports_pending)),
+            "report_logits": opt_array(self.report_logits),
+            "report_masks": opt_array(self.report_masks, bool),
+            "report_arrival": opt_array(self.report_arrival),
+            "server_distill_loss": float(self.server_distill_loss),
+            "server_student_acc": (None if self.server_student_acc is None
+                                   else float(self.server_student_acc)),
         }
 
     def load_state_dict(self, sd: Dict, scheduler) -> None:
@@ -231,6 +289,19 @@ class _RoundState:
         self.accs = None if accs is None else [float(a) for a in accs]
         self.phase_s = {k: float(v) for k, v in sd["phase_s"].items()}
         self.sim_finish_s = float(sd["sim_finish_s"])
+        # concurrent-cohort / ensemble-server fields (``.get``: absent from
+        # checkpoints written before these features existed — the defaults
+        # are exactly the serial-mode values)
+        self.rpart = opt_array(sd.get("rpart"), bool)
+        self.sampled = bool(sd.get("sampled", False))
+        rp = sd.get("reports_pending")
+        self.reports_pending = None if rp is None else int(rp)
+        self.report_logits = opt_array(sd.get("report_logits"))
+        self.report_masks = opt_array(sd.get("report_masks"), bool)
+        self.report_arrival = opt_array(sd.get("report_arrival"))
+        self.server_distill_loss = float(sd.get("server_distill_loss", 0.0))
+        acc = sd.get("server_student_acc")
+        self.server_student_acc = None if acc is None else float(acc)
 
 
 class RoundScheduler:
@@ -264,10 +335,26 @@ class RoundScheduler:
         self.timeline = SimTimeline(client_speeds(
             engine.num_clients, seed=cfg.seed,
             straggler_factor=cfg.straggler_factor))
-        # (phase, round) in host execution order — the determinism tests
-        # pin this, and it is the record of what the pipeline actually did
-        self.trace: List[Tuple[str, int]] = []
-        self._sim_end: Dict[Tuple[str, int], float] = {}
+        # concurrent-cohort mode: client-side phase nodes are keyed
+        # (phase, round, cohort) and each cohort pipelines independently;
+        # the engine must expose the per-cohort entry points
+        # (cohort_positions / cohort_local_train / ...)
+        self._concurrent = bool(getattr(cfg, "concurrent_cohorts", False))
+        self._cohort_pos: Optional[List[np.ndarray]] = None
+        if self._concurrent:
+            if not hasattr(engine, "cohort_positions"):
+                raise TypeError(
+                    f"concurrent_cohorts=True needs an engine with the "
+                    f"per-cohort interface (cohort_positions/cohort_*); "
+                    f"{type(engine).__name__} has none")
+            self._cohort_pos = [np.asarray(p, int)
+                                for p in engine.cohort_positions()]
+        # node keys in host execution order — (phase, round) for global
+        # nodes, (phase, round, cohort) for per-cohort client nodes; the
+        # determinism tests pin this, and it is the record of what the
+        # pipeline actually did
+        self.trace: List[Tuple] = []
+        self._sim_end: Dict[Tuple, float] = {}
         # event-loop state (begin()/step()/drain()); a fresh scheduler has
         # no window open
         self._order = {p: i for i, p in enumerate(self.phases)}
@@ -303,22 +390,79 @@ class RoundScheduler:
         ingestion and log assembly must happen in round order — but cost
         nothing on the timeline (disjoint clients of different rounds
         genuinely run concurrently; shared clients are serialized by their
-        timeline lanes instead)."""
+        timeline lanes instead).
+
+        Concurrent-cohort mode keys client-side nodes per cohort — deps are
+        then ``(phase, round, cohort, kind)``. Data flows stay within a
+        cohort until the global aggregate barrier (which needs every
+        cohort's report), and admission pipelines per cohort: cohort c's
+        ``local_train(r)`` waits on *its own* ``distill(r - max_inflight)``
+        on the timeline, with an order-only edge to ``eval(r -
+        max_inflight)`` pinning the host order (so a single-cohort zoo
+        replays the serial schedule — and its sim times — exactly)."""
         window = set(rounds)
-        nodes: Dict[Tuple[str, int], List] = {}
+        nodes: Dict[Tuple, List] = {}
+        if not self._concurrent:
+            for r in rounds:
+                for i, p in enumerate(self.phases):
+                    deps = []
+                    if i > 0:  # intra-round chain: the actual data flow
+                        deps.append((self.phases[i - 1], r, "data"))
+                    if (r - 1) in window:  # host-order edge
+                        deps.append((p, r - 1, "order"))
+                    if i == 0 and (r - self.max_inflight) in window:
+                        # admission: round r enters the pipeline only once
+                        # round r - max_inflight has fully retired
+                        deps.append((self.phases[-1], r - self.max_inflight,
+                                     "data"))
+                    nodes[(p, r)] = deps
+            return nodes
+        ncoh = len(self._cohort_pos)
+        client = [p for p in self.phases if p in CLIENT_PHASES]
+        last_client = client[-1]  # the cohort's slowest-retiring phase
         for r in rounds:
             for i, p in enumerate(self.phases):
-                deps = []
-                if i > 0:  # intra-round chain: the actual data flow
-                    deps.append((self.phases[i - 1], r, "data"))
-                if (r - 1) in window:  # host-order edge
-                    deps.append((p, r - 1, "order"))
-                if i == 0 and (r - self.max_inflight) in window:
-                    # admission: round r enters the pipeline only once
-                    # round r - max_inflight has fully retired
-                    deps.append((self.phases[-1], r - self.max_inflight,
-                                 "data"))
-                nodes[(p, r)] = deps
+                prev = self.phases[i - 1] if i > 0 else None
+                if p not in CLIENT_PHASES:  # global: aggregate/sdist/eval
+                    deps = []
+                    if prev is not None:
+                        if prev in CLIENT_PHASES:  # barrier on every cohort
+                            deps += [(prev, r, cj, "data")
+                                     for cj in range(ncoh)]
+                        else:
+                            deps.append((prev, r, "data"))
+                    if (r - 1) in window:
+                        deps.append((p, r - 1, "order"))
+                    nodes[(p, r)] = deps
+                    continue
+                for ci in range(ncoh):
+                    deps = []
+                    if prev is not None:
+                        # a client phase's input is its own cohort's
+                        # previous client phase, or the global teacher
+                        deps.append((prev, r, ci, "data")
+                                    if prev in CLIENT_PHASES
+                                    else (prev, r, "data"))
+                    if (r - 1) in window:
+                        deps.append((p, r - 1, ci, "order"))
+                        if p == "report":
+                            # every cohort of round r-1 reports before any
+                            # cohort of round r: the server's proxy-batch
+                            # rng draw and report ingestion stay
+                            # round-ordered under any interleaving
+                            deps += [(p, r - 1, cj, "order")
+                                     for cj in range(ncoh) if cj != ci]
+                    if p == client[0] and (r - self.max_inflight) in window:
+                        q = r - self.max_inflight
+                        # per-cohort admission: this cohort's lanes free up
+                        # when ITS round-q distill retires — cross-round
+                        # pipelining per cohort is the concurrency win...
+                        deps.append((last_client, q, ci, "data"))
+                        # ...while the host still runs eval(q) first (order
+                        # only: free on the timeline), keeping execution
+                        # deterministic and serial-equivalent numerics
+                        deps.append((self.phases[-1], q, "order"))
+                    nodes[(p, r, ci)] = deps
         return nodes
 
     # ------------------------------------------------------- the event loop
@@ -355,19 +499,21 @@ class RoundScheduler:
         if not self._pending:
             raise RuntimeError("no pending nodes — call begin() first")
         ready = [
-            pr for pr in self._pending
-            if all(d[1] not in self._states or (d[0], d[1]) in self._done
-                   for d in self._nodes[pr])
+            k for k in self._pending
+            if all(d[1] not in self._states or d[:-1] in self._done
+                   for d in self._nodes[k])
         ]
         # deterministic pipeline policy: front (client-side) phases
         # before drain phases, oldest round first, intra-round order
-        # last — under sync exactly one node is ever ready, so this
-        # replays the legacy lockstep order
-        phase, r = min(ready, key=lambda pr: (pr[0] not in FRONT_PHASES,
-                                              pr[1], self._order[pr[0]]))
-        self._run_node(phase, self._states[r], self._nodes[(phase, r)])
-        self._pending.remove((phase, r))
-        self._done.add((phase, r))
+        # next, cohort index last — under sync with one cohort exactly one
+        # node is ever ready, so this replays the legacy lockstep order
+        key = min(ready, key=lambda k: (k[0] not in FRONT_PHASES, k[1],
+                                        self._order[k[0]],
+                                        k[2] if len(k) > 2 else -1))
+        phase, r = key[0], key[1]
+        self._run_node(key, self._states[r], self._nodes[key])
+        self._pending.remove(key)
+        self._done.add(key)
         log = None
         if phase == self.phases[-1]:
             log = self._finish_round(self._states[r])
@@ -402,7 +548,7 @@ class RoundScheduler:
         admission dep of ``local_train(q + max_inflight)``, so entries are
         only dropped once they are ``max_inflight`` rounds stale."""
         del self._states[r]
-        self._done -= {(p, r) for p in self.phases}
+        self._done -= {k for k in self._done if k[1] == r}
         horizon = r - self.max_inflight
         for key in [k for k in self._sim_end if k[1] <= horizon]:
             del self._sim_end[key]
@@ -425,14 +571,20 @@ class RoundScheduler:
                 "snapshot/restore needs the per-client state hooks")
         inflight = sorted(
             r for r in self._states
-            if any((p, r) in self._done for p in self.phases))
+            if any(k[1] == r for k in self._done))
+
+        def as_list(key):
+            # (phase, round) → [p, r]; (phase, round, cohort) → [p, r, ci]
+            # — length discriminates on restore
+            return [key[0]] + [int(v) for v in key[1:]]
+
         sched = {
             "window": [int(self._window[0]), int(self._window[1])],
             "completed": len(self.logs),
-            "done": sorted([p, int(r)] for p, r in self._done),
-            "trace": [[p, int(r)] for p, r in self.trace],
-            "sim_end": sorted([p, int(r), float(t)]
-                              for (p, r), t in self._sim_end.items()),
+            "done": sorted(as_list(k) for k in self._done),
+            "trace": [as_list(k) for k in self.trace],
+            "sim_end": sorted(as_list(k) + [float(t)]
+                              for k, t in self._sim_end.items()),
             "last_retire_s": float(self._last_retire_s),
             "states": [self._states[r].state_dict() for r in inflight],
         }
@@ -470,16 +622,20 @@ class RoundScheduler:
         completed = int(sched["completed"])
         # rounds retire in order, so the retired set is a prefix
         retired = set(range(start, start + completed))
-        self._done = {(p, int(r)) for p, r in sched["done"]}
+        def as_key(e):
+            # [p, r] → (phase, round); [p, r, ci] → (phase, round, cohort)
+            return (e[0],) + tuple(int(v) for v in e[1:])
+
+        self._done = {as_key(e) for e in sched["done"]}
         self._states = {r: _RoundState(r) for r in rounds
                         if r not in retired}
         for st_sd in sched["states"]:
             self._states[int(st_sd["r"])].load_state_dict(st_sd, self)
-        self._pending = {pr for pr in self._nodes
-                         if pr[1] not in retired and pr not in self._done}
-        self.trace = [(p, int(r)) for p, r in sched["trace"]]
-        self._sim_end = {(p, int(r)): float(t)
-                         for p, r, t in sched["sim_end"]}
+        self._pending = {k for k in self._nodes
+                         if k[1] not in retired and k not in self._done}
+        self.trace = [as_key(e) for e in sched["trace"]]
+        self._sim_end = {as_key(e[:-1]): float(e[-1])
+                         for e in sched["sim_end"]}
         self._last_retire_s = float(sched["last_retire_s"])
         self.timeline.load_state_dict(state.timeline)
         self.server.load_state_dict(state.server)
@@ -487,33 +643,88 @@ class RoundScheduler:
         self.logs = [RoundLog(**lg) for lg in state.logs]
 
     # ------------------------------------------------------- node execution
-    def _run_node(self, phase: str, st: _RoundState, deps) -> None:
-        self.trace.append((phase, st.r))
+    def _run_node(self, key: Tuple, st: _RoundState, deps) -> None:
+        phase = key[0]
+        self.trace.append(key)
         t0 = time.perf_counter()
-        getattr(self, "_phase_" + phase)(st)
+        if len(key) > 2:  # per-cohort client node (concurrent mode)
+            getattr(self, "_phase_" + phase + "_cohort")(st, key[2])
+        else:
+            getattr(self, "_phase_" + phase)(st)
         dt = time.perf_counter() - t0
         st.phase_s[phase] = st.phase_s.get(phase, 0.0) + dt
-        self._account(phase, st, deps, dt)
+        self._account(key, st, deps, dt)
         if phase == "report":
             # ingestion is an *event* driven by the arrival-trace clock: it
             # runs after the node is priced so each report's simulated
             # arrival time (the client's report-lane finish) is known, and
-            # admission can replay them in arrival order
+            # admission can replay them in arrival order. In concurrent
+            # mode _ingest_reports no-ops until the round's LAST report
+            # node has accumulated and priced its cohort's rows.
             t0 = time.perf_counter()
             self._ingest_reports(st)
             st.phase_s[phase] += time.perf_counter() - t0
 
-    def _account(self, phase: str, st: _RoundState, deps,
+    def _report_part(self, st: _RoundState):
+        """The round's *reporting* participants: serial mode mutates
+        ``st.part`` through dropout/admission, concurrent mode keeps the
+        training mask intact and tracks the reduced one in ``st.rpart``."""
+        return st.rpart if st.rpart is not None else st.part
+
+    def _per_client_cost(self, phase: str, epart) -> Optional[np.ndarray]:
+        """Per-client base costs for a serial (engine-wide) client node
+        when ``sim_phase_costs`` prices cohorts individually
+        (``"phase@cohort"`` keys) — the serial baseline of the hetero-zoo
+        benchmark must charge each architecture its own cost or the
+        comparison against concurrent mode would be apples to oranges."""
+        costs = self.sim_phase_costs
+        if costs is None or not any("@" in k for k in costs):
+            return None
+        cpos = self._cohort_pos
+        if cpos is None:
+            if not hasattr(self.engine, "cohort_positions"):
+                return None
+            cpos = self._cohort_pos = [np.asarray(p, int)
+                                       for p in self.engine.cohort_positions()]
+        per = np.zeros((self.engine.num_clients,), float)
+        for ci, pos in enumerate(cpos):
+            c = costs.get(f"{phase}@{ci}", costs.get(phase, 0.0))
+            n = len(pos) if epart is None else int(epart[pos].sum())
+            per[pos] = c / max(n, 1)
+        return per
+
+    def _account(self, key: Tuple, st: _RoundState, deps,
                  measured_s: float) -> None:
         """Price the node onto the simulated straggler timeline."""
-        ready_s = max((self._sim_end.get((p, r), 0.0)
-                       for p, r, kind in deps if kind == "data"),
+        phase = key[0]
+        ready_s = max((self._sim_end.get(d[:-1], 0.0)
+                       for d in deps if d[-1] == "data"),
                       default=0.0)
-        base = (measured_s if self.sim_phase_costs is None
-                else self.sim_phase_costs.get(phase, 0.0))
+        costs = self.sim_phase_costs
+        if costs is None:
+            base = measured_s
+        elif len(key) > 2:
+            # per-cohort nodes read "phase@cohort" (heterogeneous phase
+            # costs), falling back to the shared per-phase cost
+            base = costs.get(f"{phase}@{key[2]}", costs.get(phase, 0.0))
+        else:
+            base = costs.get(phase, 0.0)
         if phase in CLIENT_PHASES:
-            n = (self.engine.num_clients if st.part is None
-                 else int(np.asarray(st.part, bool).sum()))
+            epart = (st.part if phase == "local_train"
+                     else self._report_part(st))
+            if len(key) > 2:  # this node covers one cohort's lanes only
+                pos = self._cohort_pos[key[2]]
+                lane_part = np.zeros((self.engine.num_clients,), bool)
+                lane_part[pos] = True if epart is None else epart[pos]
+                n = int(lane_part.sum())
+                per_client = base / max(n, 1)
+            else:
+                lane_part = epart
+                n = (self.engine.num_clients if epart is None
+                     else int(np.asarray(epart, bool).sum()))
+                per_client = self._per_client_cost(phase, epart)
+                if per_client is None:
+                    per_client = base / max(n, 1)
             # measured host seconds cover every participant back-to-back;
             # deployed clients run in parallel, each paying its own share
             # scaled by its straggler speed. The arrival trace delays when
@@ -527,19 +738,32 @@ class RoundScheduler:
                     process=self.cfg.arrival_process,
                     spread=self.cfg.arrival_spread,
                     bursts=self.cfg.arrival_bursts)
-            end = self.timeline.client_phase(st.part, base / max(n, 1),
+            end = self.timeline.client_phase(lane_part, per_client,
                                              ready_s, offsets=offsets)
-        elif phase == "aggregate":
+            if phase == "report":
+                # pin simulated arrival times NOW: by the time the round
+                # ingests (its last report node), other rounds' nodes may
+                # already have advanced these lanes
+                if st.report_arrival is None:
+                    st.report_arrival = np.zeros(
+                        (self.engine.num_clients,), float)
+                ids = (np.arange(self.engine.num_clients)
+                       if lane_part is None else np.flatnonzero(lane_part))
+                st.report_arrival[ids] = self.timeline.client_free[ids]
+        elif phase in ("aggregate", "server_distill"):
             end = self.timeline.server_phase(base, ready_s)
         else:  # eval: simulation-side measurement, free on the timeline
             end = ready_s
         end = float(end)  # np.float64 would poison RoundLog JSON dumps
-        self._sim_end[(phase, st.r)] = end
+        self._sim_end[key] = end
         st.sim_finish_s = end
 
     # --------------------------------------------------------- phase bodies
-    def _phase_local_train(self, st: _RoundState) -> None:
+    def _draw_participants(self, st: _RoundState) -> None:
+        """Participation sampling + churn for one round (deterministic in
+        (seed, round) — drawn once whichever node runs first)."""
         cfg = self.cfg
+        st.sampled = True
         if cfg.participation_fraction < 1.0:
             sizes = None
             if cfg.participation_policy == "weighted":
@@ -561,8 +785,23 @@ class RoundScheduler:
             # interface keep working at participation_fraction=1 (and the
             # legacy call sequence is preserved bit-for-bit)
             st.kw = {"participants": st.part}
+
+    def _phase_local_train(self, st: _RoundState) -> None:
+        cfg = self.cfg
+        self._draw_participants(st)
         st.local_losses = self._local_train(cfg.local_epochs, cfg.batch_size,
                                             **st.kw)
+
+    def _phase_local_train_cohort(self, st: _RoundState, ci: int) -> None:
+        cfg = self.cfg
+        if not st.sampled:  # round-level draw, at the first cohort node
+            self._draw_participants(st)
+        losses = self.engine.cohort_local_train(
+            ci, cfg.local_epochs, cfg.batch_size, participants=st.part)
+        if not st.local_losses:
+            st.local_losses = [0.0] * self.engine.num_clients
+        for j, p in enumerate(self._cohort_pos[ci]):
+            st.local_losses[p] = losses[j]
 
     def _phase_report(self, st: _RoundState) -> None:
         cfg = self.cfg
@@ -586,6 +825,47 @@ class RoundScheduler:
         # _ingest_reports, once simulated arrival times exist
         st.report_payload = self._report(st.px, st.powner, **st.kw)
 
+    def _phase_report_cohort(self, st: _RoundState, ci: int) -> None:
+        cfg = self.cfg
+        num = self.engine.num_clients
+        pos = self._cohort_pos[ci]
+        if st.reports_pending is None:  # round-level setup, first node
+            st.reports_pending = len(self._cohort_pos)
+            # dropout is drawn once per round; the reduced mask lives in
+            # st.rpart so cohorts that have not trained yet still see the
+            # full training mask in st.part
+            dropped = dropout_mask(num, st.r, seed=cfg.seed,
+                                   dropout=cfg.dropout_prob)
+            if dropped is not None:
+                st.rpart = (~dropped if st.part is None
+                            else (st.part & ~dropped))
+        part = self._report_part(st)
+        if self.method.data_free:
+            mc = self.engine.cohort_classwise_report(ci, participants=part)
+            if st.means_counts is None:
+                k = self.engine.clients[0].num_classes
+                zero = (np.zeros((k, k), np.float32),
+                        np.zeros((k,), np.float32))
+                st.means_counts = [zero] * num
+            for j, p in enumerate(pos):
+                st.means_counts[p] = mc[j]
+        else:
+            if st.idx is None:  # the round's shared proxy batch: one draw,
+                # round-ordered by the cross-round report order deps, so
+                # the server rng stream matches the serial schedule
+                st.idx = self.server.select_indices(cfg.proxy_batch)
+                st.px = self.server.proxy.x[st.idx]
+                st.powner = self.server.proxy.owner[st.idx]
+            lg, mk = self.engine.cohort_report(ci, st.px, st.powner,
+                                               participants=part)
+            if st.report_logits is None:
+                t, k = lg.shape[1], lg.shape[2]
+                st.report_logits = np.zeros((num, t, k), np.float32)
+                st.report_masks = np.zeros((num, t), bool)
+            st.report_logits[pos] = lg
+            st.report_masks[pos] = mk
+        st.reports_pending -= 1
+
     def _ingest_reports(self, st: _RoundState) -> None:
         """Server-side report ingestion, as an arrival-ordered event.
 
@@ -597,31 +877,48 @@ class RoundScheduler:
         through the staleness machinery exactly like dropouts — their
         buffer entries keep aging forward, so ages never go negative. With
         the cap at 0 (default) admission is the identity and the legacy
-        lockstep byte stream is preserved bit-for-bit."""
-        if self.method.data_free or st.report_payload is None:
+        lockstep byte stream is preserved bit-for-bit.
+
+        In concurrent-cohort mode the round's rows accumulate across its
+        per-cohort report nodes (``st.report_logits``/``st.report_masks``)
+        and ingestion fires once, at the round's last report node — arrival
+        times were pinned per node at pricing time (``st.report_arrival``),
+        so admission order is independent of how cohorts interleaved."""
+        if self.method.data_free:
             return
-        logits, masks = st.report_payload
-        st.report_payload = None
+        if st.report_payload is not None:  # serial: same-node handoff
+            logits, masks = st.report_payload
+            st.report_payload = None
+        elif (st.report_logits is not None and st.reports_pending == 0):
+            logits, masks = st.report_logits, st.report_masks
+            st.report_logits = st.report_masks = None
+        else:  # concurrent: cohorts still reporting
+            return
         cfg = self.cfg
+        part = self._report_part(st)
         cap = int(getattr(self.server, "max_pending_reports", 0))
         if cap > 0:
             ids = (np.arange(self.engine.num_clients)
-                   if st.part is None else np.flatnonzero(st.part))
-            arrival = self.timeline.client_free[ids]
+                   if part is None else np.flatnonzero(part))
+            arrival = st.report_arrival[ids]
             # primary key: simulated arrival; secondary: client id
             ordered = ids[np.lexsort((ids, arrival))]
             admitted_ids = self.server.admit_reports(st.r, ordered)
             if admitted_ids.size < ids.size:
                 admitted = np.zeros((self.engine.num_clients,), bool)
                 admitted[admitted_ids] = True
-                st.part = admitted
-                st.kw = {"participants": st.part}
+                part = admitted
+                if self._concurrent:
+                    st.rpart = admitted
+                else:
+                    st.part = admitted
+                    st.kw = {"participants": st.part}
         # ID fraction over the clients that actually reported; stale rows
         # merged at aggregation additionally carry reuse
-        st.id_frac = (float(masks.mean()) if st.part is None
-                      else (float(masks[st.part].mean())
-                            if st.part.any() else 0.0))
-        self.server.ingest_reports(st.r, st.part, st.idx, logits, masks,
+        st.id_frac = (float(masks.mean()) if part is None
+                      else (float(masks[part].mean())
+                            if part.any() else 0.0))
+        self.server.ingest_reports(st.r, part, st.idx, logits, masks,
                                    decay=cfg.staleness_decay,
                                    entropy_filter=self.method.server_filter)
 
@@ -630,12 +927,23 @@ class RoundScheduler:
             st.teacher_by_class, st.valid_by_class = \
                 self.server.aggregate_classwise(
                     st.means_counts, count_weighted=self.method.count_weighted,
-                    uploaded_rows=st.part)
+                    uploaded_rows=self._report_part(st))
             st.means_counts = None
             return
         st.teacher, st.valid, st.mean_staleness = self.server.aggregate_round(
             st.r, sharpen=self.method.sharpen,
             entropy_filter=self.method.server_filter)
+
+    def _phase_server_distill(self, st: _RoundState) -> None:
+        """FedDF: train the server's central student on the round's proxy
+        batch against the fused ensemble teacher (the same teacher/validity
+        the clients are about to distill from)."""
+        cfg = self.cfg
+        epochs = (getattr(cfg, "server_distill_epochs", 0)
+                  or cfg.distill_epochs)
+        st.server_distill_loss = self.server.ensemble_distill(
+            st.px, st.teacher, st.valid, epochs=epochs,
+            batch_size=cfg.batch_size)
 
     def _phase_distill(self, st: _RoundState) -> None:
         cfg = self.cfg
@@ -649,8 +957,28 @@ class RoundScheduler:
                                           cfg.distill_epochs, cfg.batch_size,
                                           **st.kw)
 
+    def _phase_distill_cohort(self, st: _RoundState, ci: int) -> None:
+        cfg = self.cfg
+        part = self._report_part(st)
+        if self.method.data_free:
+            losses = self.engine.cohort_distill_private(
+                ci, st.teacher_by_class, st.valid_by_class,
+                cfg.distill_epochs, cfg.batch_size, participants=part)
+        else:
+            w = st.valid.astype(np.float32)
+            losses = self.engine.cohort_distill(
+                ci, st.px, st.teacher, w, cfg.distill_epochs,
+                cfg.batch_size, participants=part)
+        if not st.distill_losses:
+            st.distill_losses = [0.0] * self.engine.num_clients
+        for j, p in enumerate(self._cohort_pos[ci]):
+            st.distill_losses[p] = losses[j]
+
     def _phase_eval(self, st: _RoundState) -> None:
         st.accs = self._eval(self.x_test, self.y_test)
+        if getattr(self.server, "student", None) is not None:
+            st.server_student_acc = self.server.evaluate_student(
+                self.x_test, self.y_test)
 
     def _finish_round(self, st: _RoundState) -> RoundLog:
         # served-model freshness: how long the model this round replaces
@@ -661,6 +989,7 @@ class RoundScheduler:
         # reference only moves forward.
         age = max(0.0, st.sim_finish_s - self._last_retire_s)
         self._last_retire_s = max(self._last_retire_s, st.sim_finish_s)
+        part = self._report_part(st)
         return RoundLog(
             round=st.r,
             mean_acc=float(np.mean(st.accs)),
@@ -672,10 +1001,12 @@ class RoundScheduler:
             bytes_up=self.server.bytes_received,
             bytes_down=self.server.bytes_broadcast,
             wall_s=sum(st.phase_s.values()),
-            participants=(None if st.part is None
-                          else [int(i) for i in np.flatnonzero(st.part)]),
+            participants=(None if part is None
+                          else [int(i) for i in np.flatnonzero(part)]),
             mean_staleness=st.mean_staleness,
             phase_s=dict(st.phase_s),
             sim_finish_s=st.sim_finish_s,
             served_model_age_s=age,
+            server_distill_loss=st.server_distill_loss,
+            server_student_acc=st.server_student_acc,
         )

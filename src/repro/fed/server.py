@@ -24,13 +24,94 @@ from __future__ import annotations
 
 from typing import Dict, List, NamedTuple, Optional, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation
+from repro.core import distill as D
 from repro.core.filtering import server_entropy_filter
 from repro.data.proxy import ProxyData, select_round_indices
+from repro.fed.batching import epoch_batches
 from repro.fed.participation import StaleMerge, StalenessBuffer
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+class _ServerStudent:
+    """FedDF-style central student (``method="server_distill"``).
+
+    The server — which otherwise never trains — owns one model and distills
+    it each round on the unlabeled proxy batch against the masked/weighted
+    ensemble teacher the clients are about to receive (Lin et al., FedDF:
+    ensemble distillation is the standard fusion for model-heterogeneous
+    zoos, since parameter averaging needs a shared architecture). The step
+    mirrors ``Client._distill_step`` so the student's KD objective is the
+    exact client objective."""
+
+    def __init__(self, apply_fn, params, opt: Optimizer, *,
+                 temperature: float = 3.0, seed: int = 0):
+        self.apply_fn = apply_fn
+        self.params = params
+        self.opt = opt
+        self.opt_state = opt.init(params)
+        self.temperature = temperature
+        # epoch shuffling stream, disjoint from the server's admission rng
+        # (seed + 7) and every client's stream (seed + 1000 * cid)
+        self.rng = np.random.default_rng(seed + 31)
+
+        @jax.jit
+        def _distill_step(params, opt_state, xb, teacher, w):
+            def loss_fn(p):
+                logits = apply_fn(p, xb, True)
+                return D.kd_kl_loss(logits, teacher, temperature, w)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            upd, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, upd), opt_state, loss
+
+        @jax.jit
+        def _predict(params, xb):
+            return apply_fn(params, xb, False)
+
+        self._distill_step = _distill_step
+        self._predict = _predict
+
+    def distill(self, px, teacher, weight, epochs: int,
+                batch_size: int) -> float:
+        n = len(px)
+        losses = []
+        for _ in range(epochs):
+            for idx in epoch_batches(self.rng.permutation(n), batch_size):
+                self.params, self.opt_state, loss = self._distill_step(
+                    self.params, self.opt_state, jnp.asarray(px[idx]),
+                    jnp.asarray(teacher[idx]), jnp.asarray(weight[idx]))
+                losses.append(float(loss))
+        return float(np.mean(losses)) if losses else 0.0
+
+    def evaluate(self, x_test, y_test, batch_size: int = 512) -> float:
+        hits = 0
+        for lo in range(0, len(y_test), batch_size):
+            xb = jnp.asarray(x_test[lo:lo + batch_size])
+            preds = np.asarray(jnp.argmax(self._predict(self.params, xb),
+                                          axis=-1))
+            hits += int((preds == np.asarray(y_test[lo:lo + batch_size]))
+                        .sum())
+        return hits / max(len(y_test), 1)
+
+    def state_dict(self) -> dict:
+        from repro.fed.state import rng_state_dict
+        from repro.checkpoint.ckpt import flatten_tree
+        return {
+            "params": flatten_tree(self.params),
+            "opt_state": flatten_tree(self.opt_state),
+            "rng": rng_state_dict(self.rng),
+        }
+
+    def load_state_dict(self, sd: dict) -> None:
+        from repro.fed.state import load_rng_state
+        from repro.checkpoint.ckpt import unflatten_like
+        self.params = unflatten_like(sd["params"], self.params)
+        self.opt_state = unflatten_like(sd["opt_state"], self.opt_state)
+        load_rng_state(self.rng, sd["rng"])
 
 
 class _PendingReports(NamedTuple):
@@ -90,6 +171,33 @@ class Server:
         # keyed by round index (overlap mode keeps up to max_inflight here)
         self._pending: Dict[int, Union[_PendingReports,
                                        _PendingPartials]] = {}
+        # FedDF central student (method="server_distill" only) — attached
+        # by the simulator after model init so the server stays model-free
+        # for every other method
+        self.student: Optional[_ServerStudent] = None
+
+    def attach_student(self, apply_fn, params, opt: Optimizer, *,
+                       temperature: float = 3.0, seed: int = 0) -> None:
+        """Give the server a trainable student for ensemble distillation."""
+        self.student = _ServerStudent(apply_fn, params, opt,
+                                      temperature=temperature, seed=seed)
+
+    def ensemble_distill(self, px, teacher, valid, *, epochs: int,
+                         batch_size: int) -> float:
+        """One FedDF server round: fit the student on the proxy batch
+        against the masked/weighted ensemble teacher. ``valid`` is the
+        aggregate coverage mask — rows no client predicted carry zero
+        weight, exactly as in client-side distillation."""
+        if self.student is None:
+            raise RuntimeError("ensemble_distill requires attach_student()")
+        w = np.asarray(valid, np.float32)
+        return self.student.distill(np.asarray(px), np.asarray(teacher), w,
+                                    epochs, batch_size)
+
+    def evaluate_student(self, x_test, y_test) -> float:
+        if self.student is None:
+            raise RuntimeError("evaluate_student requires attach_student()")
+        return self.student.evaluate(x_test, y_test)
 
     def _shards(self, num_clients: int) -> List[slice]:
         """Contiguous per-edge client shards, fixed at first use."""
@@ -375,6 +483,8 @@ class Server:
             "inflight_reports": [[r, n] for r, n
                                  in sorted(self._inflight_reports.items())],
             "pending": pending,
+            "student": (None if self.student is None
+                        else self.student.state_dict()),
         }
 
     def load_state_dict(self, sd: dict) -> None:
@@ -412,3 +522,8 @@ class Server:
                 opt_array(e["participants"], bool),
                 opt_array(e["logits"], np.float32),
                 opt_array(e["masks"], bool), merged)
+        # the student object (model/opt/jit) is rebuilt from config by the
+        # simulator; here we only restore its mutable tensors + rng
+        student = sd.get("student")
+        if student is not None and self.student is not None:
+            self.student.load_state_dict(student)

@@ -7,6 +7,7 @@ KMeans-DRE centroid count per the paper (§IV-A/B):
 """
 from __future__ import annotations
 
+import os
 from typing import List, Tuple
 
 import jax
@@ -25,6 +26,32 @@ from repro.fed.server import Server
 from repro.kernels import dispatch
 from repro.models.cnn import MLPClassifier, get_client_model
 from repro.optim.optimizers import sgd
+
+
+ZOOS = ("shared", "mixed")
+
+
+def resolve_zoo(zoo: str) -> str:
+    """Resolve ``cfg.zoo``: ``"auto"`` defers to the ``REPRO_ZOO``
+    environment variable (the CI matrix axis); an empty/``auto`` variable
+    means no opinion → ``"shared"`` (the historical single-architecture
+    population, bit-for-bit with every golden)."""
+    if zoo == "auto":
+        zoo = os.environ.get("REPRO_ZOO", "").strip() or "auto"
+        if zoo == "auto":
+            zoo = "shared"
+    if zoo not in ZOOS:
+        raise ValueError(f"zoo must be one of {ZOOS} or 'auto', got {zoo!r}")
+    return zoo
+
+
+def _mixed_hidden(mlp_hidden: Tuple[int, ...]) -> List[Tuple[int, ...]]:
+    """Three MLP widths for the mixed feature-mode zoo: the configured
+    hidden stack, a half-width and a double-width variant (clients cycle
+    through them by ``cid % 3``, giving three cohorts)."""
+    return [tuple(mlp_hidden),
+            tuple(max(4, v // 2) for v in mlp_hidden),
+            tuple(v * 2 for v in mlp_hidden)]
 
 
 def _centroids_for(scenario: str, num_labels: int, num_classes: int) -> int:
@@ -56,12 +83,20 @@ def build_experiment(cfg: FedConfig, dataset_name: str = "mnist_feat",
     method = get_method(cfg.method)
 
     image_mode = np.asarray(ds.x).ndim == 4
+    zoo = resolve_zoo(getattr(cfg, "zoo", "auto"))
     key = jax.random.PRNGKey(cfg.seed)
     clients: List[Client] = []
     # one shared optimizer & (in feature mode) one shared apply_fn per
     # architecture so the cohort engine can stack clients with equal arch_key
     shared_opt = sgd(cfg.lr)
-    mlp = None
+    # feature-mode zoo: "shared" = one MLP for everyone (the historical
+    # population); "mixed" = three width variants cycled by cid % 3, so the
+    # cohort engine sees three architecture cohorts. Image mode is already
+    # a ten-slot heterogeneous zoo (Tables I/II) under either setting.
+    d_in = None if image_mode else np.asarray(ds.x).shape[-1]
+    variants = ([tuple(mlp_hidden)] if zoo == "shared"
+                else _mixed_hidden(mlp_hidden))
+    mlps: List[MLPClassifier] = [None] * len(variants)
     for cid, cd in enumerate(clients_data):
         key, sub = jax.random.split(key)
         if image_mode:
@@ -71,10 +106,11 @@ def build_experiment(cfg: FedConfig, dataset_name: str = "mnist_feat",
             apply_fn = spec.apply
             arch_key = ("cnn", img_ds, cid % 10)       # Tables I/II zoo slot
         else:
-            if mlp is None:
-                mlp = MLPClassifier(d_in=np.asarray(ds.x).shape[-1],
-                                    hidden=mlp_hidden,
-                                    num_classes=ds.num_classes)
+            vi = cid % len(variants)
+            if mlps[vi] is None:
+                mlps[vi] = MLPClassifier(d_in=d_in, hidden=variants[vi],
+                                         num_classes=ds.num_classes)
+            mlp = mlps[vi]
             params = mlp.init(sub)
             apply_fn = mlp.apply
             arch_key = ("mlp", *mlp.dims)
@@ -90,6 +126,21 @@ def build_experiment(cfg: FedConfig, dataset_name: str = "mnist_feat",
                               distill_loss=method.distill_loss,
                               seed=cfg.seed, arch_key=arch_key,
                               kernel_backend=cfg.kernel_backend))
+    if getattr(method, "server_distill", False):
+        # FedDF student, drawn AFTER the client loop so client inits (and
+        # therefore every golden trace) are untouched by the extra key
+        key, sub = jax.random.split(key)
+        if image_mode:
+            spec, hw, ch = get_client_model(0, img_ds)
+            server.attach_student(spec.apply, spec.init(sub, hw, ch),
+                                  shared_opt, temperature=cfg.temperature,
+                                  seed=cfg.seed)
+        else:
+            student_mlp = MLPClassifier(d_in=d_in, hidden=tuple(mlp_hidden),
+                                        num_classes=ds.num_classes)
+            server.attach_student(student_mlp.apply, student_mlp.init(sub),
+                                  shared_opt, temperature=cfg.temperature,
+                                  seed=cfg.seed)
     return clients, server, np.asarray(ds.x_test), np.asarray(ds.y_test)
 
 
@@ -111,6 +162,7 @@ def run(cfg: FedConfig, dataset_name: str = "mnist_feat", *,
     participation.validate_config(cfg)
     scheduler.validate_config(cfg)
     dispatch.resolve(cfg.kernel_backend)
+    resolve_zoo(getattr(cfg, "zoo", "auto"))
     clients, server, x_test, y_test = build_experiment(
         cfg, dataset_name, n_train=n_train, n_test=n_test)
     engine = build_engine(clients, cfg)

@@ -17,8 +17,8 @@ from repro.core.methods import METHODS
 from repro.fed import simulator
 
 # short labels for the per-phase wall-clock breakdown (RoundLog.phase_s)
-PHASE_ABBREV = {"local_train": "lt", "report": "rep",
-                "aggregate": "agg", "distill": "dist", "eval": "ev"}
+PHASE_ABBREV = {"local_train": "lt", "report": "rep", "aggregate": "agg",
+                "server_distill": "sdist", "distill": "dist", "eval": "ev"}
 
 
 def add_config_args(ap: argparse.ArgumentParser) -> None:
@@ -116,6 +116,29 @@ def add_config_args(ap: argparse.ArgumentParser) -> None:
                          "[1, factor]; 1.0 = homogeneous fleet. Pure "
                          "accounting for the sim=... column, never "
                          "changes numerics")
+    ap.add_argument("--server-distill-epochs", type=int, default=0,
+                    help="server-student epochs per ensemble-distillation "
+                         "round (method server_distill only): the FedDF "
+                         "central student usually takes many more steps "
+                         "than client KD. 0 = same as distill epochs")
+    ap.add_argument("--zoo", default="auto",
+                    choices=["auto", "shared", "mixed"],
+                    help="feature-mode model zoo (repro.fed.simulator): "
+                         "shared = one MLP architecture for every client "
+                         "(the historical population); mixed = three width "
+                         "variants cycled over clients, giving three "
+                         "architecture cohorts; auto = shared unless "
+                         "REPRO_ZOO says otherwise. Image datasets are "
+                         "always the ten-slot heterogeneous zoo")
+    ap.add_argument("--concurrent-cohorts", action="store_true",
+                    help="schedule per-cohort phase nodes "
+                         "(repro.fed.scheduler): each architecture cohort "
+                         "advances through its round phases independently, "
+                         "so a fast cohort's round r+1 training overlaps a "
+                         "slow cohort's round r reporting. Identical "
+                         "numerics to the serial graph; changes only the "
+                         "simulated timeline. Requires --engine cohort "
+                         "(or any engine exposing cohort_positions)")
     ap.add_argument("--kernel-backend", default="auto",
                     choices=["auto", "pallas", "jnp"],
                     help="hot-path kernel dispatch (repro.kernels.dispatch): "
@@ -165,15 +188,20 @@ def config_from_args(args: argparse.Namespace) -> FedConfig:
         max_pending_reports=args.max_pending_reports,
         straggler_factor=args.straggler_factor,
         kernel_backend=args.kernel_backend,
+        server_distill_epochs=args.server_distill_epochs,
+        zoo=args.zoo,
+        concurrent_cohorts=args.concurrent_cohorts,
     )
 
 
 def print_round(log, num_clients: int) -> None:
     """One progress line per retired round (shared with ``fed_serve``)."""
     extra = ""
+    if log.server_student_acc is not None:
+        extra += f"  student={log.server_student_acc:.4f}"
     if log.participants is not None:
-        extra = (f"  part={len(log.participants)}/{num_clients}"
-                 f"  stale={log.mean_staleness:.2f}")
+        extra += (f"  part={len(log.participants)}/{num_clients}"
+                  f"  stale={log.mean_staleness:.2f}")
     if log.phase_s:
         breakdown = " ".join(
             f"{PHASE_ABBREV.get(k, k)}={v:.2f}"

@@ -83,7 +83,9 @@ def test_parity_short_proxy_batch():
 
 
 def test_cohort_groups_homogeneous_clients():
-    cfg = _cfg("edgefd", "strong", "cohort")
+    # zoo pinned: this test certifies the single-cohort structure of the
+    # shared population (the REPRO_ZOO=mixed CI entry builds three)
+    cfg = _cfg("edgefd", "strong", "cohort", zoo="shared")
     clients, server, x_test, y_test = simulator.build_experiment(
         cfg, "mnist_feat", n_train=800, n_test=300)
     engine = CohortEngine(clients)

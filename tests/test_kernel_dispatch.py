@@ -298,14 +298,14 @@ def test_backend_selection_never_retraces_round_phases():
 # ------------------------------------------------------ end-to-end parity
 
 def _run_rounds(method, engine, backend, num_devices=0, clients=4,
-                round_mode="auto"):
+                round_mode="auto", zoo="auto"):
     # round_mode="auto" lets the REPRO_ROUND_MODE=overlap CI matrix entry
     # exercise these parity cases through the overlap scheduler; the
     # golden test below pins "sync" (its logs certify the lockstep order)
     cfg = FedConfig(num_clients=clients, rounds=2, method=method,
                     scenario="strong", proxy_batch=128, batch_size=32,
                     seed=0, engine=engine, num_devices=num_devices,
-                    kernel_backend=backend, round_mode=round_mode)
+                    kernel_backend=backend, round_mode=round_mode, zoo=zoo)
     return simulator.run(cfg, "mnist_feat", n_train=600, n_test=200).rounds
 
 
@@ -344,7 +344,10 @@ def test_default_backend_round_logs_bit_for_bit_golden():
              ("edgefd_cohort", "edgefd", "cohort"),
              ("selectivefd_loop", "selective-fd", "loop")]
     for name, method, engine in cases:
-        new = _run_rounds(method, engine, "jnp", round_mode="sync")
+        # zoo pinned too: the goldens are shared-population logs and must
+        # hold under the REPRO_ZOO=mixed CI matrix entry
+        new = _run_rounds(method, engine, "jnp", round_mode="sync",
+                          zoo="shared")
         assert len(new) == len(golden[name])
         for g, n in zip(golden[name], new):
             assert g["accs"] == n.accs, (name, n.round)

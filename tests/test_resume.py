@@ -132,6 +132,25 @@ def test_backpressure_ages_never_negative():
     assert (ages >= 0).all()
 
 
+def test_server_distill_resume_every_boundary():
+    """FedDF ensemble server: the student's params/opt/rng ride the
+    checkpoint, so restoring at any boundary of round 1 — including the
+    new server_distill phase — replays the rest bit-for-bit."""
+    n = check_resume("loop", 0, "sync", method="server_distill")
+    assert n == 6  # six phases: the extra one is server_distill
+
+
+def test_concurrent_cohort_resume_boundaries():
+    """Mixed zoo + per-cohort phase nodes under overlap: every cohort
+    node of round 1 is a kill boundary, and the interleaved schedule
+    resumes bit-for-bit."""
+    n = check_resume("cohort", 0, "overlap", zoo="mixed",
+                     concurrent_cohorts=True)
+    # 4 clients cycle into 3 cohorts (cid % 3): 3 client phases x 3
+    # cohort nodes + aggregate + eval
+    assert n == 11
+
+
 def test_snapshot_restore_preserves_event_loop_bookkeeping():
     """Structural round-trip: pending/done/trace/sim-times survive the
     tree form (JSON manifest types), and restore rejects a round-mode

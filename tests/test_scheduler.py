@@ -66,16 +66,17 @@ def _build_scheduler(cfg, **sched_kw):
 def test_sync_mode_reproduces_golden_logs_bit_for_bit():
     """The scheduler's sync path must replay the lockstep Algorithm-1
     order exactly: same goldens as the pre-scheduler tree, bit for bit.
-    round_mode/kernel_backend are pinned so the test also holds under the
-    REPRO_ROUND_MODE=overlap / REPRO_KERNEL_BACKEND=pallas CI entries —
-    on a clean CPU host these pins ARE the defaults."""
+    round_mode/kernel_backend/zoo are pinned so the test also holds under
+    the REPRO_ROUND_MODE=overlap / REPRO_KERNEL_BACKEND=pallas /
+    REPRO_ZOO=mixed CI entries — on a clean CPU host these pins ARE the
+    defaults."""
     golden = json.loads(GOLDEN_PATH.read_text())
     for name, method, engine in [("edgefd_loop", "edgefd", "loop"),
                                  ("edgefd_cohort", "edgefd", "cohort")]:
         cfg = FedConfig(num_clients=4, rounds=2, method=method,
                         scenario="strong", proxy_batch=128, batch_size=32,
                         seed=0, engine=engine, round_mode="sync",
-                        kernel_backend="jnp")
+                        kernel_backend="jnp", zoo="shared")
         res = simulator.run(cfg, "mnist_feat", n_train=600, n_test=200)
         assert len(res.rounds) == len(golden[name])
         for g, n in zip(golden[name], res.rounds):
