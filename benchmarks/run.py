@@ -24,6 +24,7 @@ BENCH_WRITERS = {
     "BENCH_scale.json": "scale",
     "BENCH_cohort_mesh.json": "mesh",
     "BENCH_participation.json": "participation",
+    "BENCH_robust.json": "robust",
 }
 
 
@@ -59,9 +60,9 @@ def main(argv=None) -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (async_rounds, cohort_scaling, fig2_dre_cost,
-                            fig5_sweeps, hetero_zoo, kernel_bench, scale,
-                            serve_resume, table3_accuracy,
-                            table4_complexity)
+                            fig5_sweeps, hetero_zoo, kernel_bench,
+                            robust_agg, scale, serve_resume,
+                            table3_accuracy, table4_complexity)
 
     jobs = [
         # kernels records to the repo-root BENCH_kernels.json (micro +
@@ -90,6 +91,10 @@ def main(argv=None) -> None:
         ("participation", lambda: cohort_scaling.main(
             ["--fractions", "0.5", "1.0"] + (["--clients", "8"]
                                              if quick else []))),
+        # robust records mean-vs-robust-reducer accuracy under Byzantine
+        # clients, compiled reducer overhead, and the watchdog
+        # rollback-recovery row to the repo-root BENCH_robust.json
+        ("robust", lambda: robust_agg.run_and_save(quick=quick)),
         ("fig2", lambda: fig2_dre_cost.run(
             sizes=(256, 512, 1024) if quick else (256, 512, 1024, 2048, 4096))),
         ("table4", lambda: table4_complexity.run(quick=quick)),

@@ -78,11 +78,16 @@ def bench(*, clients: int, rounds: int, engine: str = "loop",
     ref_logs = sched.run_rounds(0, rounds)
     compute_s = time.perf_counter() - t0
 
-    # checkpointed service loop: snapshot + atomic save every round
-    with tempfile.TemporaryDirectory() as ckdir:
+    # checkpointed service loop: snapshot + atomic save every round.
+    # Alongside the full snapshot, also save the fed_serve production form
+    # (``logs_tail=0`` — retired logs stream to the sidecar instead of the
+    # checkpoint) to show its bytes stay flat as the service ages.
+    with tempfile.TemporaryDirectory() as ckdir, \
+            tempfile.TemporaryDirectory() as flatdir:
         sched2 = _build(cfg)
         sched2.begin(0, rounds)
         ckpt_s, ckpt_bytes, n_ckpts = 0.0, 0, 0
+        flat_bytes = []
         mid_step = None
         while sched2.has_pending():
             _, _, log = sched2.step()
@@ -93,6 +98,9 @@ def bench(*, clients: int, rounds: int, engine: str = "loop",
                 ckpt_s += time.perf_counter() - t0
                 ckpt_bytes = os.path.getsize(path)
                 n_ckpts += 1
+                flat_bytes.append(os.path.getsize(save_state(
+                    flatdir, len(sched2.logs),
+                    sched2.snapshot(logs_tail=0).to_tree(), keep_last=3)))
                 if len(sched2.logs) == max(1, rounds // 2):
                     mid_step = len(sched2.logs)
 
@@ -114,6 +122,8 @@ def bench(*, clients: int, rounds: int, engine: str = "loop",
             "ckpt_per_round_s": per_round,
             "ckpt_overhead_frac": ckpt_s / compute_s if compute_s else 0.0,
             "ckpt_bytes": ckpt_bytes,
+            "ckpt_bytes_flat_first": flat_bytes[0],
+            "ckpt_bytes_flat_last": flat_bytes[-1],
             "n_checkpoints": n_ckpts,
             "rebuild_s": build_s,
             "restore_s": restore_s,
@@ -170,6 +180,16 @@ def parse_check(path: str) -> None:
     if not (r["compute_s"] > 0 and r["ckpt_per_round_s"] > 0
             and r["restore_s"] > 0):
         raise SystemExit(f"{path}: non-positive timing in {r}")
+    first = r.get("ckpt_bytes_flat_first")
+    last = r.get("ckpt_bytes_flat_last")
+    # one-sided: in-flight overlap state makes individual snapshots vary
+    # (and often shrink as rounds drain), but retired history must never
+    # accumulate in the checkpoint
+    if first is not None and last - first > 1024:
+        raise SystemExit(
+            f"{path}: logs_tail=0 checkpoint grew {first}B -> {last}B over "
+            f"{r['rounds']} rounds — retired-log streaming is not keeping "
+            "checkpoint size flat")
     frac_max = data.get("overhead_frac_max", OVERHEAD_FRAC_MAX)
     if r["ckpt_overhead_frac"] > frac_max:
         raise SystemExit(

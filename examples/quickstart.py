@@ -106,6 +106,31 @@ cfg = FedConfig(
     # (0 = unbounded, the legacy ingestion). The CLI spells it
     #   python -m repro.launch.fed_train --max-pending-reports 64
     max_pending_reports=0,
+    # Robustness (repro.fed.faults + the server defense stack): inject
+    # Byzantine clients with fault_mode ("nan", "random_logits",
+    # "scaled", "colluding_flip", "stale_replay") over a fixed
+    # adversarial subset (byzantine_frac) and/or per-round coins
+    # (fault_prob) — deterministic in (seed, round, client), applied to
+    # reports after honest local training. Defend with
+    # robust_aggregation ("trimmed_mean"/"median"/"krum_row" replace
+    # the mean over the client axis; trim_frac sets the trim window),
+    # the default sanitize pass (sanitize_reports scrubs non-finite
+    # rows; log.scrubbed_rows counts them), trust-based quarantine
+    # (quarantine_threshold > 0 benches persistent outliers for
+    # quarantine_rounds, escalating on repeat offenses), and the
+    # divergence watchdog (watchdog=True rolls a poisoned round back to
+    # the last healthy snapshot and quarantines the suspects;
+    # log.rollbacks / log.quarantined record it). The CLI spells it
+    #   python -m repro.launch.fed_train --fault-mode colluding_flip \
+    #       --byzantine-frac 0.3 --robust-aggregation trimmed_mean \
+    #       --trim-frac 0.45 --quarantine-threshold 2.0 --watchdog
+    # The defaults below are the trusting legacy protocol, bit-for-bit.
+    fault_mode="none",
+    byzantine_frac=0.0,
+    robust_aggregation="mean",
+    sanitize_reports=True,
+    quarantine_threshold=0.0,
+    watchdog=False,
     # Hot-path kernels (repro.kernels.dispatch): "auto" runs the Pallas
     # TPU kernels (fused Lloyd fit, fused KD-KL fwd+bwd, tiled KuLSIF
     # gram) on TPU and the jnp reference elsewhere — on CPU this is

@@ -32,6 +32,7 @@ from __future__ import annotations
 import json
 import os
 import re
+import time
 import warnings
 import zipfile
 import zlib
@@ -107,7 +108,24 @@ def unflatten_like(flat: Dict[str, np.ndarray], like_tree, shardings=None,
 # Atomic container I/O
 # ---------------------------------------------------------------------------
 
-def _atomic_savez(path: str, arrays: Dict[str, np.ndarray]) -> None:
+# transient-OSError retry policy for checkpoint writes (ENOSPC racing a
+# log rotation, EINTR, a flaky network mount): attempts = retries + 1,
+# sleeping backoff * 2**attempt between them
+_SAVE_RETRIES = 3
+_SAVE_BACKOFF_S = 0.05
+
+
+def _write_tmp(tmp: str, arrays: Dict[str, np.ndarray]) -> None:
+    """One durable tmp-file write attempt (tests inject failures here)."""
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _atomic_savez(path: str, arrays: Dict[str, np.ndarray], *,
+                  retries: int = _SAVE_RETRIES,
+                  backoff: float = _SAVE_BACKOFF_S) -> None:
     """Write ``arrays`` to ``path`` atomically and durably.
 
     The tmp name is deterministic and ends in ``.npz`` so ``np.savez``
@@ -115,13 +133,30 @@ def _atomic_savez(path: str, arrays: Dict[str, np.ndarray]) -> None:
     it silently appends one — the historical bug left ``*.npz.tmp.npz``
     orphans and made the final ``os.replace`` a guess). fsync-before-
     rename plus a directory fsync makes the rename itself crash-durable.
+
+    A transient ``OSError`` during the write/rename (ENOSPC while
+    retention races, EINTR, flaky mounts) is retried with bounded
+    exponential backoff; the final attempt re-raises so callers (the
+    serving loop) can decide to warn-and-continue instead of dying.
     """
     tmp = path + ".tmp.npz"
-    with open(tmp, "wb") as f:
-        np.savez(f, **arrays)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
+    for attempt in range(retries + 1):
+        try:
+            _write_tmp(tmp, arrays)
+            os.replace(tmp, path)
+            break
+        except OSError as e:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass  # never written, or swept elsewhere
+            if attempt == retries:
+                raise
+            delay = backoff * (2 ** attempt)
+            warnings.warn(
+                f"checkpoint write {path} failed ({e!r}); "
+                f"retry {attempt + 1}/{retries} in {delay:.2f}s")
+            time.sleep(delay)
     try:
         dfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
         try:

@@ -253,3 +253,53 @@ class FedConfig:
     # single cohort this reproduces the serial schedule bit-for-bit; the
     # default False keeps the engine-wide phase nodes.
     concurrent_cohorts: bool = False
+    # -- payload-fault injection (repro.fed.faults) --------------------------
+    # deterministic report corruption applied *after* local training, in the
+    # scheduler's ingest path, so every engine injects identically. "none"
+    # (default) never builds the injector — bit-for-bit the legacy logs.
+    # Modes: nan | random_logits | scaled | colluding_flip | stale_replay.
+    fault_mode: str = "none"
+    # transient corruption: each participant flips an independent coin per
+    # round (deterministic in (seed, round, client)). 0 = never.
+    fault_prob: float = 0.0
+    # fixed adversarial subset: round(byzantine_frac * C) clients, stable in
+    # (seed, client), corrupt every round the window is active. 0 = none.
+    byzantine_frac: float = 0.0
+    # attack window in round indices: faults fire for rounds in
+    # [fault_start, fault_start + fault_duration); duration 0 = unbounded.
+    fault_start: int = 0
+    fault_duration: int = 0
+    # -- robust knowledge aggregation (repro.core.aggregation) ---------------
+    # reducer over the client axis of the stacked (C, t, K) reports:
+    # "mean" (default, bit-for-bit legacy) | "trimmed_mean" | "median" |
+    # "krum_row". With num_edge_aggregators > 1 the robust reduce runs
+    # edge-locally and the root fuses contributor-weighted edge centers —
+    # an approximation of the flat robust reduce (exact at E=1).
+    robust_aggregation: str = "mean"
+    # trimmed_mean only: fraction trimmed from each tail per coordinate
+    # (must exceed the expected Byzantine fraction to tolerate it).
+    trim_frac: float = 0.2
+    # server sanitize pass: scrub non-finite report rows at ingest and
+    # account them per client (RoundLog.scrubbed_rows). On by default — an
+    # exact no-op on finite reports.
+    sanitize_reports: bool = True
+    # -- trust & quarantine (repro.fed.server) -------------------------------
+    # per-client trust = EWMA of the per-round outlier distance from the
+    # robust center, normalized by the round median. A contributing client
+    # whose trust exceeds quarantine_threshold is demoted to a
+    # non-participant for quarantine_rounds * strikes rounds (escalating),
+    # then re-admitted on probation (trust reset to threshold / 2).
+    # 0 (default) disables trust tracking entirely.
+    quarantine_threshold: float = 0.0
+    trust_ewma: float = 0.5
+    quarantine_rounds: int = 2
+    # -- divergence watchdog (repro.fed.scheduler) ---------------------------
+    # guard on retired RoundLog health: non-finite losses/accs, mean_acc
+    # collapsing > watchdog_acc_drop below the best seen, or distill loss
+    # spiking > watchdog_loss_factor x the recent median trigger a rollback
+    # to the last healthy in-memory snapshot and quarantine the round's
+    # top-suspect clients. False (default) = no snapshots, no checks.
+    watchdog: bool = False
+    watchdog_acc_drop: float = 0.2
+    watchdog_loss_factor: float = 10.0
+    watchdog_max_rollbacks: int = 3

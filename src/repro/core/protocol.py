@@ -83,6 +83,13 @@ class RoundLog:
     # accuracy measured at the eval phase (None = no student attached)
     server_distill_loss: float = 0.0
     server_student_acc: Optional[float] = None
+    # defense stack (repro.fed.server / repro.fed.scheduler): report rows
+    # the sanitize pass scrubbed this round, clients quarantined on this
+    # round's evidence (None = trust tracking off), and the cumulative
+    # watchdog rollback count as of this round's retirement
+    scrubbed_rows: int = 0
+    quarantined: Optional[List[int]] = None
+    rollbacks: int = 0
 
 
 @dataclasses.dataclass

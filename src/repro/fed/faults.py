@@ -1,0 +1,242 @@
+"""Deterministic payload-fault traces for Byzantine / corrupted clients.
+
+Wired like :mod:`repro.fed.clock`'s churn and dropout lanes: every draw is
+a pure function of ``(seed, round, client)``, so the loop, cohort, and
+mesh-sharded engines inject *identical* corruption and the cross-engine
+parity tests extend to every fault mode unchanged. Faults are applied to
+the report payloads **after** local training (in the scheduler's report
+ingest path), never to the training itself — a faulty client trains
+honestly and lies on the wire, matching the logit-poisoning threat model
+of the FD robustness literature.
+
+Two orthogonal schedules compose into the per-round fault mask:
+
+- ``byzantine_frac`` — a *fixed* adversarial subset (the same clients every
+  round), chosen as the ``round(frac * C)`` clients with the smallest
+  ``(seed, client)`` lane uniforms.
+- ``fault_prob`` — *transient* corruption, an independent per-round coin
+  per client (``(seed, round, client)``), modelling flaky hardware rather
+  than an adversary.
+
+``fault_start`` / ``fault_duration`` window the attack in round time
+(``duration=0`` = unbounded), which is how the watchdog benchmark stages a
+mid-run ``nan`` burst.
+
+Modes (``FAULT_MODES``):
+
+- ``none`` — no injection (the legacy protocol; injector is not built).
+- ``nan`` — claimed-ID rows are replaced with NaN. With the server's
+  sanitize pass disabled this poisons the fused teacher fleet-wide.
+- ``random_logits`` — reports replaced with Gaussian noise, deterministic
+  in ``(seed, round, client)``.
+- ``scaled`` — reports multiplied by ``SCALE_FACTOR`` (magnitude attack:
+  a single attacker dominates a plain mean).
+- ``colluding_flip`` — reports multiplied by ``-SCALE_FACTOR``: every
+  attacker pushes the fused teacher in the same *wrong* direction, the
+  strongest coordinated attack against an unweighted mean.
+- ``stale_replay`` — each faulty client replays its own report from the
+  previous faulty round (first fault round passes through unmodified
+  while the cache warms). The replay cache is part of the checkpoint
+  state, so kill-and-resume stays bit-for-bit.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fed.clock import _lane_uniform
+
+FAULT_MODES = ("none", "nan", "random_logits", "scaled", "colluding_flip",
+               "stale_replay")
+
+# magnitude used by the scaled / colluding_flip attacks
+SCALE_FACTOR = 50.0
+# std-dev of the random_logits attack (large vs typical logit scale)
+RANDOM_STD = 10.0
+
+_TAG_BYZ = 0xBAD0    # fixed adversarial subset lane
+_TAG_FLAKY = 0xFA17  # transient per-round corruption lane
+
+
+def validate_fault_config(mode: str, fault_prob: float, byzantine_frac: float,
+                          fault_start: int, fault_duration: int) -> None:
+    if mode not in FAULT_MODES:
+        raise ValueError(
+            f"fault_mode must be one of {FAULT_MODES}, got {mode!r}")
+    if not 0.0 <= fault_prob < 1.0:
+        raise ValueError(f"fault_prob must be in [0, 1), got {fault_prob!r}")
+    if not 0.0 <= byzantine_frac <= 1.0:
+        raise ValueError(
+            f"byzantine_frac must be in [0, 1], got {byzantine_frac!r}")
+    if fault_start < 0:
+        raise ValueError(f"fault_start must be >= 0, got {fault_start!r}")
+    if fault_duration < 0:
+        raise ValueError(
+            f"fault_duration must be >= 0 (0 = unbounded), "
+            f"got {fault_duration!r}")
+
+
+def byzantine_ids(num_clients: int, *, seed: int = 0,
+                  byzantine_frac: float = 0.0) -> np.ndarray:
+    """``(C,)`` bool — the fixed adversarial subset.
+
+    Exactly ``round(frac * C)`` clients, the ones with the smallest
+    ``(seed, client)`` lane uniforms — stable across rounds and fleet
+    restarts, and independent of round count.
+    """
+    k = int(round(byzantine_frac * num_clients))
+    mask = np.zeros((num_clients,), bool)
+    if k <= 0 or num_clients == 0:
+        return mask
+    u = _lane_uniform(seed, num_clients, _TAG_BYZ)
+    mask[np.argsort(u, kind="stable")[:k]] = True
+    return mask
+
+
+def fault_mask(num_clients: int, round_idx: int, *, seed: int = 0,
+               mode: str = "none", fault_prob: float = 0.0,
+               byzantine_frac: float = 0.0, fault_start: int = 0,
+               fault_duration: int = 0) -> Optional[np.ndarray]:
+    """``(C,)`` bool — which clients corrupt their report this round.
+
+    ``None`` means nobody (mode off, schedule empty, or the round falls
+    outside the ``[fault_start, fault_start + fault_duration)`` window).
+    The mask is the union of the fixed Byzantine subset and the transient
+    per-round coins, each deterministic in ``(seed[, round], client)``.
+    """
+    validate_fault_config(mode, fault_prob, byzantine_frac, fault_start,
+                          fault_duration)
+    if mode == "none" or (fault_prob == 0.0 and byzantine_frac == 0.0):
+        return None
+    if round_idx < fault_start:
+        return None
+    if fault_duration > 0 and round_idx >= fault_start + fault_duration:
+        return None
+    mask = byzantine_ids(num_clients, seed=seed,
+                         byzantine_frac=byzantine_frac)
+    if fault_prob > 0.0:
+        mask = mask | (_lane_uniform(num_clients=num_clients, seed=seed,
+                                     tag=_TAG_FLAKY,
+                                     round_idx=round_idx) < fault_prob)
+    return mask if mask.any() else None
+
+
+def _client_rng(seed: int, round_idx: int, cid: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence(
+        [seed % 2**32, round_idx % 2**32, int(cid), _TAG_FLAKY]))
+
+
+class FaultInjector:
+    """Applies a fault trace to report payloads, engine-independently.
+
+    Built by the scheduler only when ``fault_mode != "none"`` — the legacy
+    path never constructs one, keeping defaults bit-for-bit. The only
+    mutable state is the ``stale_replay`` cache (last honest report per
+    faulty client), which rides ``state_dict`` through checkpoints.
+    """
+
+    def __init__(self, num_clients: int, *, mode: str, seed: int = 0,
+                 fault_prob: float = 0.0, byzantine_frac: float = 0.0,
+                 fault_start: int = 0, fault_duration: int = 0):
+        validate_fault_config(mode, fault_prob, byzantine_frac, fault_start,
+                              fault_duration)
+        self.num_clients = num_clients
+        self.mode = mode
+        self.seed = seed
+        self.fault_prob = fault_prob
+        self.byzantine_frac = byzantine_frac
+        self.fault_start = fault_start
+        self.fault_duration = fault_duration
+        # stale_replay cache: cid -> (logits (t, K), mask (t,)) or, for the
+        # classwise path, cid -> (means (Kc, K), counts (Kc,))
+        self._replay: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+    def mask(self, round_idx: int) -> Optional[np.ndarray]:
+        return fault_mask(self.num_clients, round_idx, seed=self.seed,
+                          mode=self.mode, fault_prob=self.fault_prob,
+                          byzantine_frac=self.byzantine_frac,
+                          fault_start=self.fault_start,
+                          fault_duration=self.fault_duration)
+
+    def _faulty_ids(self, round_idx: int,
+                    part: Optional[np.ndarray]) -> List[int]:
+        m = self.mask(round_idx)
+        if m is None:
+            return []
+        if part is not None:
+            m = m & np.asarray(part, bool)
+        return [int(c) for c in np.nonzero(m)[0]]
+
+    def corrupt_reports(self, round_idx: int, logits, masks,
+                        part: Optional[np.ndarray]):
+        """Corrupt the stacked ``(C, t, K)`` logits / ``(C, t)`` masks.
+
+        Returns ``(logits, masks)`` — the inputs unchanged (same objects)
+        when no participant is faulty this round, copies otherwise.
+        """
+        ids = self._faulty_ids(round_idx, part)
+        if not ids:
+            return logits, masks
+        lo = np.array(logits, np.float32, copy=True)
+        mk = np.array(masks, bool, copy=True)
+        for c in ids:
+            if self.mode == "nan":
+                lo[c][mk[c]] = np.nan
+            elif self.mode == "random_logits":
+                lo[c] = RANDOM_STD * _client_rng(
+                    self.seed, round_idx, c).standard_normal(
+                        lo[c].shape).astype(np.float32)
+            elif self.mode == "scaled":
+                lo[c] = SCALE_FACTOR * lo[c]
+            elif self.mode == "colluding_flip":
+                lo[c] = -SCALE_FACTOR * lo[c]
+            elif self.mode == "stale_replay":
+                cached = self._replay.get(c)
+                fresh = (np.array(lo[c], copy=True),
+                         np.array(mk[c], copy=True))
+                if cached is not None:
+                    lo[c], mk[c] = cached
+                self._replay[c] = fresh
+        return lo, mk
+
+    def corrupt_classwise(self, round_idx: int,
+                          means_counts: Sequence[Tuple[np.ndarray,
+                                                       np.ndarray]],
+                          part: Optional[np.ndarray]):
+        """Same trace applied to data-free ``(means, counts)`` payloads."""
+        ids = self._faulty_ids(round_idx, part)
+        if not ids:
+            return means_counts
+        out = [(np.array(m, np.float32, copy=True), np.array(c, copy=True))
+               for m, c in means_counts]
+        for c in ids:
+            means, counts = out[c]
+            if self.mode == "nan":
+                means[counts > 0] = np.nan
+            elif self.mode == "random_logits":
+                means[...] = RANDOM_STD * _client_rng(
+                    self.seed, round_idx, c).standard_normal(
+                        means.shape).astype(np.float32)
+            elif self.mode == "scaled":
+                means *= SCALE_FACTOR
+            elif self.mode == "colluding_flip":
+                means *= -SCALE_FACTOR
+            elif self.mode == "stale_replay":
+                cached = self._replay.get(c)
+                fresh = (np.array(means, copy=True),
+                         np.array(counts, copy=True))
+                if cached is not None:
+                    out[c] = cached
+                self._replay[c] = fresh
+        return out
+
+    # -- checkpoint state ---------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"replay": [[int(c), np.asarray(a), np.asarray(b)]
+                           for c, (a, b) in sorted(self._replay.items())]}
+
+    def load_state_dict(self, sd: dict) -> None:
+        self._replay = {int(c): (np.array(a, np.float32, copy=True),
+                                 np.array(b, copy=True))
+                        for c, a, b in sd.get("replay", [])}

@@ -81,6 +81,7 @@ import numpy as np
 from repro.core.protocol import RoundLog
 from repro.fed.clock import (ARRIVAL_PROCESSES, SimTimeline, arrival_offsets,
                              client_speeds, dropout_mask, online_mask)
+from repro.fed.faults import FaultInjector, validate_fault_config
 from repro.fed.participation import sample_participants
 
 ROUND_MODES = ("sync", "overlap")
@@ -146,6 +147,25 @@ def validate_config(cfg) -> None:
         raise ValueError(
             f"max_pending_reports must be >= 0 (0 = unbounded), got "
             f"{cfg.max_pending_reports!r}")
+    validate_fault_config(getattr(cfg, "fault_mode", "none"),
+                          getattr(cfg, "fault_prob", 0.0),
+                          getattr(cfg, "byzantine_frac", 0.0),
+                          getattr(cfg, "fault_start", 0),
+                          getattr(cfg, "fault_duration", 0))
+    # robust_aggregation / trust knobs are validated where they land (the
+    # Server constructor); the watchdog knobs live here with the scheduler
+    if getattr(cfg, "watchdog_max_rollbacks", 3) < 0:
+        raise ValueError(
+            f"watchdog_max_rollbacks must be >= 0, got "
+            f"{cfg.watchdog_max_rollbacks!r}")
+    if getattr(cfg, "watchdog_acc_drop", 0.2) <= 0.0:
+        raise ValueError(
+            f"watchdog_acc_drop must be > 0, got "
+            f"{cfg.watchdog_acc_drop!r}")
+    if getattr(cfg, "watchdog_loss_factor", 10.0) <= 1.0:
+        raise ValueError(
+            f"watchdog_loss_factor must be > 1, got "
+            f"{cfg.watchdog_loss_factor!r}")
 
 
 def round_phases(method) -> Tuple[str, ...]:
@@ -364,9 +384,35 @@ class RoundScheduler:
         self._pending: set = set()
         self._done: set = set()
         self.logs: List[RoundLog] = []
+        # monotone count of rounds retired in the open window. Equal to
+        # ``len(self.logs)`` unless ``snapshot(logs_tail=...)`` truncated
+        # the retained history (the fed_serve sidecar streams retired logs
+        # out of the checkpoint) — restore then trusts this counter, not
+        # the tail length.
+        self.completed = 0
         # sim time of the last round retirement — the served-model
         # freshness reference (service start = 0.0)
         self._last_retire_s = 0.0
+        # Byzantine / corruption fault trace: built only when enabled, so
+        # the default path never constructs one (bit-for-bit legacy)
+        self.faults: Optional[FaultInjector] = None
+        if getattr(cfg, "fault_mode", "none") != "none":
+            self.faults = FaultInjector(
+                engine.num_clients, mode=cfg.fault_mode, seed=cfg.seed,
+                fault_prob=getattr(cfg, "fault_prob", 0.0),
+                byzantine_frac=getattr(cfg, "byzantine_frac", 0.0),
+                fault_start=getattr(cfg, "fault_start", 0),
+                fault_duration=getattr(cfg, "fault_duration", 0))
+        # divergence watchdog: rollback-to-last-healthy-retire on a sick
+        # RoundLog. ``_wd_tree`` is the in-memory restore point (a plain
+        # nested tree — asdict deep-copies, so later mutation can't alias
+        # into it); it is NOT checkpointed and rebuilds at the next
+        # healthy retire (or on restore()).
+        self._watchdog = bool(getattr(cfg, "watchdog", False))
+        self.rollbacks = 0
+        self._wd_best_acc = 0.0
+        self._wd_loss_hist: List[float] = []
+        self._wd_tree = None
         # engine entry points resolved once (per-phase interface, with the
         # historical *_all fallback for pre-built engines)
         self._local_train = _entry(engine, "phase_local_train",
@@ -484,6 +530,11 @@ class RoundScheduler:
         self._pending = set(self._nodes)
         self._done = set()
         self.logs = []
+        self.completed = 0
+        if self._watchdog and hasattr(self.engine, "state_dict"):
+            # arm the rollback point at the window start too — a round-0
+            # attack must be as recoverable as a mid-run one
+            self._wd_tree = self.snapshot().to_tree()
 
     def has_pending(self) -> bool:
         """True while the open window still has nodes to execute."""
@@ -517,8 +568,16 @@ class RoundScheduler:
         log = None
         if phase == self.phases[-1]:
             log = self._finish_round(self._states[r])
+            if self._watchdog and self._wd_unhealthy(log) \
+                    and self._wd_rollback(r):
+                # the round was replayed from the last healthy retire; the
+                # sick log is discarded and the caller sees no retirement
+                return phase, r, None
             self.logs.append(log)
+            self.completed += 1
             self._retire(r)
+            if self._watchdog:
+                self._wd_note_healthy(log)
         return phase, r, log
 
     def drain(self, progress: Optional[Callable[[RoundLog], None]] = None
@@ -548,20 +607,30 @@ class RoundScheduler:
         admission dep of ``local_train(q + max_inflight)``, so entries are
         only dropped once they are ``max_inflight`` rounds stale."""
         del self._states[r]
+        pop_o = getattr(self.server, "pop_round_outlier", None)
+        if pop_o is not None:  # drop the round's suspect scores (the
+            pop_o(r)          # watchdog consumed them on rollback already)
         self._done -= {k for k in self._done if k[1] == r}
         horizon = r - self.max_inflight
         for key in [k for k in self._sim_end if k[1] <= horizon]:
             del self._sim_end[key]
 
     # --------------------------------------------------- snapshot / restore
-    def snapshot(self):
+    def snapshot(self, *, logs_tail: Optional[int] = None):
         """Capture the full experiment at the current phase boundary.
 
         Returns an ``ExperimentState`` assembling this scheduler's node
         bookkeeping and in-flight round payloads with the ``state_dict()``
         of the timeline, the server (pending reports, staleness buffers,
         byte ledger, rng) and the engine (per-client params/opt-state/rng).
-        Call only between ``step()``s — mid-node state is not capturable."""
+        Call only between ``step()``s — mid-node state is not capturable.
+
+        ``logs_tail`` caps how many retired ``RoundLog``s ride the state
+        (``None`` = all of them, the legacy layout). A caller that streams
+        retired logs to durable storage of its own (the fed_serve
+        ``logs.jsonl`` sidecar) passes ``logs_tail=0`` so checkpoint size
+        stays flat over a long service; ``sched["completed"]`` still
+        records the true retired count."""
         from repro.fed.state import STATE_VERSION, ExperimentState
         if self._window is None:
             raise RuntimeError("nothing to snapshot — call begin() first")
@@ -580,14 +649,21 @@ class RoundScheduler:
 
         sched = {
             "window": [int(self._window[0]), int(self._window[1])],
-            "completed": len(self.logs),
+            "completed": int(self.completed),
             "done": sorted(as_list(k) for k in self._done),
             "trace": [as_list(k) for k in self.trace],
             "sim_end": sorted(as_list(k) + [float(t)]
                               for k, t in self._sim_end.items()),
             "last_retire_s": float(self._last_retire_s),
             "states": [self._states[r].state_dict() for r in inflight],
+            "rollbacks": int(self.rollbacks),
+            "wd_best_acc": float(self._wd_best_acc),
+            "wd_loss_hist": [float(v) for v in self._wd_loss_hist],
         }
+        if self.faults is not None:
+            sched["faults"] = self.faults.state_dict()
+        logs = (self.logs if logs_tail is None
+                else self.logs[max(len(self.logs) - int(logs_tail), 0):])
         import dataclasses as _dc
         return ExperimentState(
             version=STATE_VERSION,
@@ -596,7 +672,7 @@ class RoundScheduler:
             timeline=self.timeline.state_dict(),
             server=self.server.state_dict(),
             engine=self.engine.state_dict(),
-            logs=[_dc.asdict(lg) for lg in self.logs],
+            logs=[_dc.asdict(lg) for lg in logs],
         )
 
     def restore(self, state) -> None:
@@ -640,7 +716,91 @@ class RoundScheduler:
         self.timeline.load_state_dict(state.timeline)
         self.server.load_state_dict(state.server)
         self.engine.load_state_dict(state.engine)
+        # a tail-truncated snapshot (fed_serve sidecar) carries fewer logs
+        # than ``completed``; the counter is authoritative either way
         self.logs = [RoundLog(**lg) for lg in state.logs]
+        self.completed = completed
+        # robustness state (``.get``: absent from checkpoints written
+        # before the fault/watchdog machinery existed)
+        if self.faults is not None:
+            self.faults.load_state_dict(sched.get("faults", {}))
+        self.rollbacks = int(sched.get("rollbacks", 0))
+        self._wd_best_acc = float(sched.get("wd_best_acc", 0.0))
+        self._wd_loss_hist = [float(v)
+                              for v in sched.get("wd_loss_hist", [])]
+        if self._watchdog:
+            # the restored boundary is (by construction) a healthy one —
+            # re-arm the in-memory rollback point here so a fault right
+            # after resume can still be rolled back
+            self._wd_tree = self.snapshot().to_tree()
+
+    # -------------------------------------------------- divergence watchdog
+    def _wd_unhealthy(self, log: RoundLog) -> bool:
+        """Health guard over a freshly assembled ``RoundLog``: non-finite
+        metrics, an accuracy collapse vs the best healthy round, or a
+        distill-loss spike vs the recent healthy median."""
+        cfg = self.cfg
+        vals = (log.mean_acc, log.local_loss, log.distill_loss)
+        if not all(np.isfinite(v) for v in vals):
+            return True
+        if self._wd_best_acc > 0.0 and \
+                log.mean_acc < self._wd_best_acc - cfg.watchdog_acc_drop:
+            return True
+        if self._wd_loss_hist and log.distill_loss > 0.0:
+            ref = float(np.median(self._wd_loss_hist))
+            if ref > 0.0 and log.distill_loss > cfg.watchdog_loss_factor * ref:
+                return True
+        return False
+
+    def _wd_suspects(self, r: int) -> List[int]:
+        """Top-suspect clients for round ``r`` from the server's normalized
+        outlier scores (median ≈ 1 for honest clients): everyone past 3×
+        the honest scale, else the single worst scorer."""
+        pop = getattr(self.server, "pop_round_outlier", None)
+        dist = pop(r) if pop is not None else None
+        if dist is None or dist.size == 0:
+            return []
+        bad = np.flatnonzero(~np.isfinite(dist) | (dist > 3.0))
+        if bad.size == 0 and float(np.max(dist)) > 0.0:
+            bad = np.asarray([int(np.argmax(dist))], int)
+        return [int(i) for i in bad]
+
+    def _wd_rollback(self, r: int) -> bool:
+        """Roll the experiment back to the last healthy retirement and
+        quarantine the round's top outlier suspects so the deterministic
+        replay of round ``r`` runs without them. Returns False (caller
+        retires the sick round as-is) when no restore point exists yet or
+        the rollback budget is spent."""
+        if self._wd_tree is None or \
+                self.rollbacks >= self.cfg.watchdog_max_rollbacks:
+            return False
+        # capture BEFORE restore: the suspect scores live in server state
+        # and the rollback counter rides the sched snapshot, both about to
+        # be overwritten
+        suspects = self._wd_suspects(r)
+        prev = self.rollbacks
+        from repro.fed.state import ExperimentState
+        self.restore(ExperimentState.from_tree(self._wd_tree))
+        self.rollbacks = prev + 1
+        if suspects:
+            # from round r (not r+1): the replay re-runs r itself, and the
+            # fault trace is deterministic — without the quarantine the
+            # same clients would poison the same round again
+            self.server._ensure_fleet(self.engine.num_clients)
+            self.server.quarantine(suspects, r, event_round=r)
+        # re-take the restore point so it carries the quarantine and the
+        # bumped rollback counter (restore() armed a pre-quarantine one)
+        self._wd_tree = self.snapshot().to_tree()
+        return True
+
+    def _wd_note_healthy(self, log: RoundLog) -> None:
+        """A round retired healthy: refresh the health references and
+        re-take the in-memory restore point."""
+        self._wd_best_acc = max(self._wd_best_acc, float(log.mean_acc))
+        if log.distill_loss > 0.0:
+            self._wd_loss_hist.append(float(log.distill_loss))
+            del self._wd_loss_hist[:-8]
+        self._wd_tree = self.snapshot().to_tree()
 
     # ------------------------------------------------------- node execution
     def _run_node(self, key: Tuple, st: _RoundState, deps) -> None:
@@ -779,6 +939,15 @@ class RoundScheduler:
                              churn=cfg.churn_prob)
         if online is not None:
             st.part = online if st.part is None else (st.part & online)
+        # quarantined clients sit the round out like sampled-out ones,
+        # draining through the staleness buffer — unless that would empty
+        # the round entirely (the protocol needs at least one report)
+        quarantine = getattr(self.server, "quarantine_mask", None)
+        q = quarantine(st.r) if quarantine is not None else None
+        if q is not None:
+            keep = ~q if st.part is None else (st.part & ~q)
+            if keep.any():
+                st.part = keep
         if st.part is not None:
             # participants is passed as a kwarg only when a subset was
             # actually drawn, so pre-existing engines with the historical
@@ -896,6 +1065,12 @@ class RoundScheduler:
             return
         cfg = self.cfg
         part = self._report_part(st)
+        if self.faults is not None:
+            # the fault trace corrupts what faulty clients *send* — after
+            # training, before the server sees anything. Deterministic in
+            # (seed, round, client), so every engine injects identically.
+            logits, masks = self.faults.corrupt_reports(
+                st.r, logits, masks, part)
         cap = int(getattr(self.server, "max_pending_reports", 0))
         if cap > 0:
             ids = (np.arange(self.engine.num_clients)
@@ -924,10 +1099,18 @@ class RoundScheduler:
 
     def _phase_aggregate(self, st: _RoundState) -> None:
         if self.method.data_free:
+            if self.faults is not None:
+                # classwise payloads are untouched between report and
+                # aggregate, so injecting here is payload-equivalent to
+                # injecting at report time — and single-sited across the
+                # serial and concurrent-cohort report paths
+                st.means_counts = self.faults.corrupt_classwise(
+                    st.r, st.means_counts, self._report_part(st))
             st.teacher_by_class, st.valid_by_class = \
                 self.server.aggregate_classwise(
                     st.means_counts, count_weighted=self.method.count_weighted,
-                    uploaded_rows=self._report_part(st))
+                    uploaded_rows=self._report_part(st),
+                    round_idx=st.r)
             st.means_counts = None
             return
         st.teacher, st.valid, st.mean_staleness = self.server.aggregate_round(
@@ -990,6 +1173,10 @@ class RoundScheduler:
         age = max(0.0, st.sim_finish_s - self._last_retire_s)
         self._last_retire_s = max(self._last_retire_s, st.sim_finish_s)
         part = self._report_part(st)
+        pop_s = getattr(self.server, "pop_scrubbed", None)
+        scrubbed = int(pop_s(st.r)) if pop_s is not None else 0
+        pop_q = getattr(self.server, "pop_quarantined", None)
+        newly_q = pop_q(st.r) if pop_q is not None else []
         return RoundLog(
             round=st.r,
             mean_acc=float(np.mean(st.accs)),
@@ -1009,4 +1196,7 @@ class RoundScheduler:
             served_model_age_s=age,
             server_distill_loss=st.server_distill_loss,
             server_student_acc=st.server_student_acc,
+            scrubbed_rows=scrubbed,
+            quarantined=(newly_q if newly_q else None),
+            rollbacks=self.rollbacks,
         )

@@ -137,19 +137,77 @@ class _PendingPartials(NamedTuple):
     dens: np.ndarray        # (E, t) per-edge weight sums
     uploaded_bytes: int     # upload traffic, priced from pre-filter masks
     mean_staleness: float   # exact fleet-wide Σ age / Σ contributing
+    # trust-signal extras (track_outliers only; None keeps old checkpoints
+    # loadable): per-client distance from the *edge-local* center and the
+    # contributing mask, computed at ingest since the stack dies here
+    outlier: Optional[np.ndarray] = None    # (C,) float
+    contrib: Optional[np.ndarray] = None    # (C,) bool
+
+
+# EWMA trust scores for non-finite senders are pinned here instead of inf
+# so the running average stays finite (inf would never decay back)
+_TRUST_CAP = 1e9
 
 
 class Server:
     def __init__(self, proxy: ProxyData, *, seed: int = 0,
-                 num_edges: int = 1, max_pending_reports: int = 0):
+                 num_edges: int = 1, max_pending_reports: int = 0,
+                 robust_aggregation: str = "mean", trim_frac: float = 0.2,
+                 sanitize: bool = True, quarantine_threshold: float = 0.0,
+                 trust_ewma: float = 0.5, quarantine_rounds: int = 2,
+                 track_outliers: bool = False):
         if num_edges < 1:
             raise ValueError(f"num_edges must be >= 1, got {num_edges!r}")
         if max_pending_reports < 0:
             raise ValueError(f"max_pending_reports must be >= 0 "
                              f"(0 = unbounded), got {max_pending_reports!r}")
+        if robust_aggregation not in aggregation.ROBUST_AGGREGATIONS:
+            raise ValueError(
+                f"robust_aggregation must be one of "
+                f"{aggregation.ROBUST_AGGREGATIONS}, "
+                f"got {robust_aggregation!r}")
+        if not 0.0 <= trim_frac < 0.5:
+            raise ValueError(
+                f"trim_frac must be in [0, 0.5), got {trim_frac!r}")
+        if quarantine_threshold < 0.0:
+            raise ValueError(f"quarantine_threshold must be >= 0 "
+                             f"(0 = off), got {quarantine_threshold!r}")
+        if not 0.0 < trust_ewma <= 1.0:
+            raise ValueError(
+                f"trust_ewma must be in (0, 1], got {trust_ewma!r}")
+        if quarantine_rounds < 1:
+            raise ValueError(f"quarantine_rounds must be >= 1, "
+                             f"got {quarantine_rounds!r}")
         self.proxy = proxy
         self.rng = np.random.default_rng(seed + 7)
         self.num_edges = int(num_edges)
+        # -- defense stack --------------------------------------------------
+        self.robust_aggregation = robust_aggregation
+        self.trim_frac = float(trim_frac)
+        self.sanitize = bool(sanitize)
+        self.quarantine_threshold = float(quarantine_threshold)
+        self.trust_ewma = float(trust_ewma)
+        self.quarantine_rounds = int(quarantine_rounds)
+        # outlier distances are only worth computing when someone consumes
+        # them: the auto-quarantine rule or the scheduler's watchdog
+        self.track_outliers = bool(track_outliers) or quarantine_threshold > 0
+        # sanitize-pass accounting: cumulative scrubbed rows (total and per
+        # client) plus the per-round counts the scheduler pops into RoundLog
+        self.scrub_total = 0
+        self.scrub_clients: Optional[np.ndarray] = None       # (C,) int64
+        self._scrubbed_rounds: Dict[int, int] = {}
+        # trust & quarantine (lazily sized to the fleet on first signal):
+        # trust = EWMA of the median-normalized outlier distance;
+        # quarantined_until[c] > r means c sits out round r; strikes
+        # escalate re-quarantine duration
+        self.trust: Optional[np.ndarray] = None               # (C,) float
+        self.quarantined_until: Optional[np.ndarray] = None   # (C,) int64
+        self.strikes: Optional[np.ndarray] = None             # (C,) int64
+        # per-round normalized outlier scores / quarantine events, parked
+        # until the scheduler pops them at round retire (both checkpointed
+        # — aggregate and retire can be separated by a kill)
+        self._round_outlier: Dict[int, np.ndarray] = {}
+        self._quarantine_events: Dict[int, List[int]] = {}
         # admission/backpressure: the ingest queue holds at most this many
         # client reports across all in-flight rounds (0 = unbounded, the
         # legacy behavior). A report arriving at a full queue is refused —
@@ -213,6 +271,100 @@ class Server:
     def select_indices(self, batch: int) -> np.ndarray:
         return select_round_indices(self.rng, self.proxy, batch)
 
+    # ------------------------------------------------ trust & quarantine
+    def _ensure_fleet(self, num_clients: int) -> None:
+        """Size (or grow) the per-client bookkeeping arrays. Growth pads
+        with zeros — callers that only know a subset of ids (quarantine)
+        stay safe when a fleet-sized caller comes along later."""
+        def grow(a, dtype):
+            if a is None:
+                return np.zeros((num_clients,), dtype)
+            if a.shape[0] < num_clients:
+                b = np.zeros((num_clients,), dtype)
+                b[:a.shape[0]] = a
+                return b
+            return a
+        self.trust = grow(self.trust, np.float64)
+        self.quarantined_until = grow(self.quarantined_until, np.int64)
+        self.strikes = grow(self.strikes, np.int64)
+        self.scrub_clients = grow(self.scrub_clients, np.int64)
+
+    def quarantine_mask(self, round_idx: int) -> Optional[np.ndarray]:
+        """(C,) bool — True where a client sits out this round. ``None``
+        (nobody ever quarantined) keeps the legacy participant draw
+        untouched."""
+        if self.quarantined_until is None:
+            return None
+        mask = self.quarantined_until > round_idx
+        return mask if mask.any() else None
+
+    def quarantine(self, ids, first_round: int, *,
+                   event_round: Optional[int] = None) -> List[int]:
+        """Demote ``ids`` to non-participants from ``first_round`` on.
+
+        Duration escalates with each client's strike count
+        (``quarantine_rounds * strikes``); on release the client re-enters
+        on probation — its trust is reset to half the threshold, so one
+        more outlier round re-quarantines it while honest behaviour decays
+        it back toward zero. The event is recorded under ``event_round``
+        (default ``first_round``) for the scheduler to surface on that
+        round's ``RoundLog``."""
+        ids = sorted(int(c) for c in np.asarray(ids).ravel())
+        if not ids:
+            return []
+        self._ensure_fleet(max(ids) + 1)
+        for c in ids:
+            self.strikes[c] += 1
+            until = first_round + self.quarantine_rounds * int(
+                self.strikes[c])
+            self.quarantined_until[c] = max(
+                int(self.quarantined_until[c]), until)
+            self.trust[c] = 0.5 * self.quarantine_threshold
+        key = first_round if event_round is None else event_round
+        self._quarantine_events.setdefault(key, []).extend(ids)
+        return ids
+
+    def _update_trust(self, round_idx: int, dist: np.ndarray,
+                      contributing: np.ndarray) -> None:
+        """Fold one round's outlier distances into the EWMA trust scores.
+
+        Distances are normalized by the round's median over finite
+        contributors (scale-free across rounds/methods); non-finite
+        senders pin at ``_TRUST_CAP``. Non-contributing clients are left
+        untouched — absence is not evidence."""
+        dist = np.asarray(dist, np.float64)
+        contributing = np.asarray(contributing, bool)
+        self._ensure_fleet(dist.shape[0])
+        finite = np.isfinite(dist) & contributing
+        scale = float(np.median(dist[finite])) if finite.any() else 0.0
+        with np.errstate(invalid="ignore"):
+            norm = np.where(np.isfinite(dist),
+                            dist / max(scale, 1e-12), np.inf)
+        norm = np.minimum(np.where(contributing, norm, 0.0), _TRUST_CAP)
+        a = self.trust_ewma
+        self.trust = np.where(contributing,
+                              (1.0 - a) * self.trust + a * norm, self.trust)
+        self._round_outlier[round_idx] = norm
+        if self.quarantine_threshold > 0.0:
+            bad = contributing & (self.trust > self.quarantine_threshold)
+            if bad.any():
+                # round_idx just aggregated — exclusion starts next round
+                self.quarantine(np.nonzero(bad)[0], round_idx + 1,
+                                event_round=round_idx)
+
+    def pop_scrubbed(self, round_idx: int) -> int:
+        """Rows the sanitize pass scrubbed from this round's reports."""
+        return int(self._scrubbed_rounds.pop(round_idx, 0))
+
+    def pop_quarantined(self, round_idx: int) -> List[int]:
+        """Clients quarantined on this round's evidence (may be empty)."""
+        return self._quarantine_events.pop(round_idx, [])
+
+    def pop_round_outlier(self, round_idx: int) -> Optional[np.ndarray]:
+        """This round's normalized outlier scores (watchdog suspect
+        ranking); None when tracking is off or the round had none."""
+        return self._round_outlier.pop(round_idx, None)
+
     def admit_reports(self, round_idx: int,
                       ordered_ids: np.ndarray) -> np.ndarray:
         """Admission control over one round's report arrivals.
@@ -265,6 +417,20 @@ class Server:
         if round_idx in self._pending:
             raise ValueError(f"round {round_idx} reports already ingested "
                              "and not yet aggregated")
+        if self.sanitize:
+            # scrub *before* anything downstream — most importantly before
+            # the staleness merge, so a corrupt row can never enter the
+            # buffer and get replayed into later rounds. Clean reports come
+            # back as the same objects (bit-for-bit the legacy path).
+            logits, masks, per_client = aggregation.scrub_nonfinite(
+                np.asarray(logits, np.float32), np.asarray(masks, bool))
+            n_bad = int(per_client.sum())
+            if n_bad:
+                self._scrubbed_rounds[round_idx] = (
+                    self._scrubbed_rounds.get(round_idx, 0) + n_bad)
+                self.scrub_total += n_bad
+                self._ensure_fleet(len(per_client))
+                self.scrub_clients += per_client
         if self.num_edges > 1:
             self._pending[round_idx] = self._ingest_edges(
                 round_idx, participants, idx, logits, masks, decay=decay,
@@ -285,7 +451,16 @@ class Server:
         """Two-tier ingest: every edge reduces its client shard to one
         masked/weighted ``(num, den)`` partial, doing the server-side
         filter and staleness bookkeeping shard-locally. The full (C, t, K)
-        stack is consumed here and never parked in ``_pending``."""
+        stack is consumed here and never parked in ``_pending``.
+
+        With a robust ``robust_aggregation`` each edge runs the robust
+        reduce over its *own shard* and contributes ``(center * n_e, n_e)``
+        — the root then fuses contributor-weighted edge centers. This is an
+        **approximation** of the flat robust reduce (a mean of per-shard
+        medians is not the global median; its breakdown point degrades when
+        attackers concentrate in one shard), traded for the same O(E·t·K)
+        root cost as the mean path. ``num_edges=1`` never enters this
+        method, so E=1 equals the flat robust reduce exactly."""
         logits = np.asarray(logits, np.float32)
         masks = np.asarray(masks, bool)
         part = (None if participants is None
@@ -296,6 +471,11 @@ class Server:
         uploaded_bytes = 0
         ages_sum, n_contrib = 0.0, 0
         subset = part is not None
+        robust = self.robust_aggregation != "mean"
+        outlier = (np.zeros((logits.shape[0],), np.float64)
+                   if self.track_outliers else None)
+        contrib = (np.zeros((logits.shape[0],), bool)
+                   if self.track_outliers else None)
         for e, sl in enumerate(shards):
             l_e, m_e = logits[sl], masks[sl]
             cw = None
@@ -317,15 +497,38 @@ class Server:
             if entropy_filter:  # per-client-row filter — shard-local is exact
                 m_e = np.asarray(server_entropy_filter(
                     jnp.asarray(l_e), jnp.asarray(m_e)))
-            num, den = aggregation.partial_masked_sums(
-                jnp.asarray(l_e), jnp.asarray(m_e),
-                None if cw is None else jnp.asarray(cw))
-            nums.append(np.asarray(num))
-            dens.append(np.asarray(den))
+            if robust:
+                # robust modes use staleness weights only as a
+                # contribute/exclude mask (one vote per surviving client)
+                m_r = m_e if cw is None else (m_e & (cw > 0.0)[:, None])
+                t_e, _ = aggregation.robust_reduce(
+                    jnp.asarray(l_e), jnp.asarray(m_r),
+                    self.robust_aggregation, trim_frac=self.trim_frac)
+                center = np.asarray(t_e)
+                cnt = m_r.sum(axis=0).astype(np.float32)      # (t,)
+                num, den = center * cnt[:, None], cnt
+            else:
+                m_r = m_e
+                num, den = aggregation.partial_masked_sums(
+                    jnp.asarray(l_e), jnp.asarray(m_e),
+                    None if cw is None else jnp.asarray(cw),
+                    guard_finite=self.sanitize)
+                num, den = np.asarray(num), np.asarray(den)
+                center = None
+            if self.track_outliers:
+                if center is None:
+                    with np.errstate(invalid="ignore"):
+                        center = num / np.maximum(den, 1.0)[:, None]
+                d_e, c_e = aggregation.client_outlier_distance(
+                    l_e, m_r, center)
+                outlier[sl], contrib[sl] = d_e, c_e
+            nums.append(num)
+            dens.append(den)
         mean_staleness = (ages_sum / n_contrib
                           if subset and n_contrib else 0.0)
         return _PendingPartials(np.stack(nums), np.stack(dens),
-                                uploaded_bytes, mean_staleness)
+                                uploaded_bytes, mean_staleness,
+                                outlier, contrib)
 
     def aggregate_round(self, round_idx: int, *,
                         sharpen: Optional[float] = None,
@@ -353,18 +556,30 @@ class Server:
             self.bytes_received += p.uploaded_bytes
             self.bytes_broadcast += int(teacher.shape[0]) * int(
                 teacher.shape[-1]) * 4
+            if self.track_outliers and p.outlier is not None:
+                self._update_trust(round_idx, p.outlier, p.contrib)
             return (np.asarray(teacher), np.asarray(valid),
                     p.mean_staleness)
         if p.merged is None:
             teacher, valid = self.aggregate(p.logits, p.masks,
                                             sharpen=sharpen,
                                             entropy_filter=entropy_filter)
+            if self.track_outliers:
+                dist, contrib = aggregation.client_outlier_distance(
+                    p.logits, p.masks, teacher)
+                self._update_trust(round_idx, dist, contrib)
             return teacher, valid, 0.0
         teacher, valid = self.aggregate(
             p.merged.logits, p.merged.masks, sharpen=sharpen,
             entropy_filter=entropy_filter,
             client_weights=p.merged.client_weights,
             uploaded_rows=p.participants)
+        if self.track_outliers:
+            m_eff = (np.asarray(p.merged.masks, bool)
+                     & (np.asarray(p.merged.client_weights) > 0.0)[:, None])
+            dist, contrib = aggregation.client_outlier_distance(
+                p.merged.logits, m_eff, teacher)
+            self._update_trust(round_idx, dist, contrib)
         return teacher, valid, p.merged.mean_staleness
 
     def aggregate(self, logits, masks, *, sharpen: Optional[float] = None,
@@ -389,12 +604,23 @@ class Server:
             masks = server_entropy_filter(logits, masks)
         cw = (None if client_weights is None
               else np.asarray(client_weights, np.float32))
-        if cw is not None and not bool(np.all(cw == 1.0)):
+        if self.robust_aggregation != "mean":
+            # robust order statistics have no fractional voters: staleness
+            # weights act only as a contribute/exclude mask here
+            m_r = (masks if cw is None
+                   else jnp.logical_and(masks,
+                                        jnp.asarray(cw > 0.0)[:, None]))
+            teacher, valid = aggregation.robust_reduce(
+                logits, m_r, self.robust_aggregation,
+                trim_frac=self.trim_frac, temperature_sharpen=sharpen)
+        elif cw is not None and not bool(np.all(cw == 1.0)):
             teacher, valid = aggregation.weighted_masked_mean_logits(
-                logits, masks, jnp.asarray(cw), temperature_sharpen=sharpen)
+                logits, masks, jnp.asarray(cw), temperature_sharpen=sharpen,
+                guard_finite=self.sanitize)
         else:
             teacher, valid = aggregation.masked_mean_logits(
-                logits, masks, temperature_sharpen=sharpen)
+                logits, masks, temperature_sharpen=sharpen,
+                guard_finite=self.sanitize)
         # accounting: clients upload only ID logits (mask-compressed), and
         # only the round's participants upload at all
         k = logits.shape[-1]
@@ -405,7 +631,8 @@ class Server:
         return np.asarray(teacher), np.asarray(valid)
 
     def aggregate_classwise(self, means_counts, *, count_weighted: bool,
-                            uploaded_rows=None):
+                            uploaded_rows=None,
+                            round_idx: Optional[int] = None):
         """FKD/PLS: fuse per-class mean logits from all clients.
 
         ``uploaded_rows`` (C,) restricts the upload accounting to this
@@ -415,22 +642,51 @@ class Server:
         With ``num_edges > 1`` each edge reduces its client shard's
         classwise sums first and the root fuses E partials — a regrouped
         sum, identical up to float ordering.
+
+        A robust ``robust_aggregation`` applies the same client-axis
+        reducers to the ``(C, K_cls, K)`` stack (class slots standing in
+        for proxy positions), unweighted — per-class sample counts become
+        a contribute/exclude mask, one vote per reporting client. The
+        classwise payload is tiny (K_cls · K), so the robust reduce is
+        always global, even with ``num_edges > 1``.
         """
         means = jnp.stack([m for m, _ in means_counts])     # (C, K_cls, K)
         counts = jnp.stack([c for _, c in means_counts])    # (C, K_cls)
-        if count_weighted:
-            w = counts[..., None]
+        if self.sanitize:
+            mn = np.asarray(means, np.float32)
+            cn = np.asarray(counts)
+            fin = np.isfinite(mn).all(axis=-1)               # (C, K_cls)
+            if not fin.all():
+                per_client = ((cn > 0) & ~fin).sum(axis=1).astype(np.int64)
+                n_bad = int(per_client.sum())
+                if n_bad:
+                    if round_idx is not None:
+                        self._scrubbed_rounds[round_idx] = (
+                            self._scrubbed_rounds.get(round_idx, 0) + n_bad)
+                    self.scrub_total += n_bad
+                    self._ensure_fleet(len(per_client))
+                    self.scrub_clients += per_client
+                means = jnp.asarray(np.where(fin[..., None], mn, 0.0))
+                counts = jnp.asarray(np.where(fin, cn, 0))
+        if self.robust_aggregation != "mean":
+            teacher, valid = aggregation.robust_reduce(
+                means, counts > 0, self.robust_aggregation,
+                trim_frac=self.trim_frac)
+            teacher, valid = jnp.asarray(teacher), jnp.asarray(valid)
         else:
-            w = (counts > 0).astype(jnp.float32)[..., None]
-        if self.num_edges > 1:
-            shards = self._shards(int(means.shape[0]))
-            num = sum(jnp.sum((means * w)[sl], axis=0) for sl in shards)
-            den = sum(jnp.sum(w[sl], axis=0) for sl in shards)
-        else:
-            num = jnp.sum(means * w, axis=0)
-            den = jnp.sum(w, axis=0)
-        teacher = num / jnp.maximum(den, 1.0)
-        valid = jnp.sum(counts, axis=0) > 0
+            if count_weighted:
+                w = counts[..., None]
+            else:
+                w = (counts > 0).astype(jnp.float32)[..., None]
+            if self.num_edges > 1:
+                shards = self._shards(int(means.shape[0]))
+                num = sum(jnp.sum((means * w)[sl], axis=0) for sl in shards)
+                den = sum(jnp.sum(w[sl], axis=0) for sl in shards)
+            else:
+                num = jnp.sum(means * w, axis=0)
+                den = jnp.sum(w, axis=0)
+            teacher = num / jnp.maximum(den, 1.0)
+            valid = jnp.sum(counts, axis=0) > 0
         reporting = (means.shape[0] if uploaded_rows is None
                      else int(np.asarray(uploaded_rows, bool).sum()))
         self.bytes_received += reporting * int(np.prod(means.shape[1:])) * 4
@@ -456,7 +712,8 @@ class Server:
                     "round": r, "kind": "partials",
                     "nums": p.nums, "dens": p.dens,
                     "uploaded_bytes": int(p.uploaded_bytes),
-                    "mean_staleness": float(p.mean_staleness)})
+                    "mean_staleness": float(p.mean_staleness),
+                    "outlier": p.outlier, "contrib": p.contrib})
                 continue
             m = p.merged
             pending.append({
@@ -485,6 +742,20 @@ class Server:
             "pending": pending,
             "student": (None if self.student is None
                         else self.student.state_dict()),
+            # defense stack: sanitize accounting + trust/quarantine (all
+            # optional on load, so pre-robustness checkpoints stay valid)
+            "scrub_total": int(self.scrub_total),
+            "scrub_clients": self.scrub_clients,
+            "scrubbed_rounds": [[r, n] for r, n
+                                in sorted(self._scrubbed_rounds.items())],
+            "trust": self.trust,
+            "quarantined_until": self.quarantined_until,
+            "strikes": self.strikes,
+            "round_outlier": [[r, a] for r, a
+                              in sorted(self._round_outlier.items())],
+            "quarantine_events": [
+                [r, [int(c) for c in ids]]
+                for r, ids in sorted(self._quarantine_events.items())],
         }
 
     def load_state_dict(self, sd: dict) -> None:
@@ -509,7 +780,9 @@ class Server:
             if e["kind"] == "partials":
                 self._pending[r] = _PendingPartials(
                     np.asarray(e["nums"]), np.asarray(e["dens"]),
-                    int(e["uploaded_bytes"]), float(e["mean_staleness"]))
+                    int(e["uploaded_bytes"]), float(e["mean_staleness"]),
+                    opt_array(e.get("outlier"), np.float64),
+                    opt_array(e.get("contrib"), bool))
                 continue
             m = e["merged"]
             merged = None if m is None else StaleMerge(
@@ -527,3 +800,17 @@ class Server:
         student = sd.get("student")
         if student is not None and self.student is not None:
             self.student.load_state_dict(student)
+        # defense stack (absent in pre-robustness checkpoints)
+        self.scrub_total = int(sd.get("scrub_total", 0))
+        self.scrub_clients = opt_array(sd.get("scrub_clients"), np.int64)
+        self._scrubbed_rounds = {int(r): int(n)
+                                 for r, n in sd.get("scrubbed_rounds", [])}
+        self.trust = opt_array(sd.get("trust"), np.float64)
+        self.quarantined_until = opt_array(sd.get("quarantined_until"),
+                                           np.int64)
+        self.strikes = opt_array(sd.get("strikes"), np.int64)
+        self._round_outlier = {int(r): np.asarray(a, np.float64)
+                               for r, a in sd.get("round_outlier", [])}
+        self._quarantine_events = {
+            int(r): [int(c) for c in ids]
+            for r, ids in sd.get("quarantine_events", [])}

@@ -76,10 +76,22 @@ def build_experiment(cfg: FedConfig, dataset_name: str = "mnist_feat",
                              labels_per_client=cfg.labels_per_client,
                              seed=cfg.seed)
     proxy = build_proxy(clients_data, cfg.proxy_fraction, seed=cfg.seed)
+    qthresh = getattr(cfg, "quarantine_threshold", 0.0)
     server = Server(proxy, seed=cfg.seed,
                     num_edges=cfg.num_edge_aggregators,
                     max_pending_reports=getattr(cfg, "max_pending_reports",
-                                                0))
+                                                0),
+                    robust_aggregation=getattr(cfg, "robust_aggregation",
+                                               "mean"),
+                    trim_frac=getattr(cfg, "trim_frac", 0.2),
+                    sanitize=getattr(cfg, "sanitize_reports", True),
+                    quarantine_threshold=qthresh,
+                    trust_ewma=getattr(cfg, "trust_ewma", 0.5),
+                    quarantine_rounds=getattr(cfg, "quarantine_rounds", 2),
+                    # the watchdog ranks suspects by outlier distance, so
+                    # tracking must be on even without auto-quarantine
+                    track_outliers=bool(getattr(cfg, "watchdog", False))
+                    or qthresh > 0)
     method = get_method(cfg.method)
 
     image_mode = np.asarray(ds.x).ndim == 4

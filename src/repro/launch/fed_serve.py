@@ -37,12 +37,13 @@ import dataclasses
 import json
 import os
 import signal
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 
 from repro.checkpoint import latest_step, restore_state, save_state
 from repro.core.methods import get_method
+from repro.core.protocol import RoundLog
 from repro.fed import participation, scheduler as sched_mod, simulator
 from repro.fed.scheduler import RoundScheduler
 from repro.kernels import dispatch
@@ -54,6 +55,35 @@ from repro.launch.fed_train import (add_config_args, config_from_args,
 # served freshness numbers line up with the async benchmark's timeline
 FIXED_COSTS = {"local_train": 1.0, "report": 0.1, "aggregate": 0.3,
                "distill": 1.0, "eval": 0.0}
+
+# retired-round history sidecar, next to the checkpoints: each retired
+# RoundLog is appended here as one JSON line *before* the checkpoint is
+# written, and checkpoints are taken with ``snapshot(logs_tail=0)`` — so
+# checkpoint size stays flat over a long service instead of growing with
+# the log history
+LOGS_SIDECAR = "logs.jsonl"
+
+
+def _trim_sidecar(path: str, completed: int,
+                  tail_len: int) -> List[RoundLog]:
+    """Reconcile the sidecar with a restored checkpoint.
+
+    The sidecar is appended before each checkpoint, so after a crash it
+    may hold entries for rounds the restored state has not retired yet —
+    those are replayed and re-appended, so the file is truncated to the
+    first ``completed`` lines. Returns the history *head*: the retired
+    rounds the checkpoint no longer carries (``completed - tail_len``
+    entries; zero for pre-sidecar checkpoints that kept every log)."""
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    keep = lines[:completed]
+    if len(keep) != len(lines):
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write("".join(ln + "\n" for ln in keep))
+        os.replace(tmp, path)
+    head = keep[:max(completed - tail_len, 0)]
+    return [RoundLog(**json.loads(ln)) for ln in head]
 
 
 def parse_crash_spec(spec: str) -> Optional[Tuple[str, int]]:
@@ -127,31 +157,56 @@ def main(argv=None):
     sched = build_scheduler(cfg, args.dataset, args.n_train, args.n_test,
                             args.fixed_phase_costs)
 
+    sidecar = (os.path.join(args.ckpt_dir, LOGS_SIDECAR) if ckpt_on
+               else None)
+    if sidecar is not None:
+        # the sidecar is appended before the first checkpoint is written,
+        # so the directory must exist already
+        os.makedirs(args.ckpt_dir, exist_ok=True)
     resumed_from = None
+    history: List[RoundLog] = []
     if args.resume and args.ckpt_dir:
         step = latest_step(args.ckpt_dir)
         if step is not None:
             sched.restore(restore_state(args.ckpt_dir, step))
             resumed_from = step
+            if sidecar is not None and os.path.exists(sidecar):
+                history = _trim_sidecar(sidecar, sched.completed,
+                                        len(sched.logs))
             print(f"resumed from checkpoint step {step} "
-                  f"({len(sched.logs)} rounds already retired)")
+                  f"({sched.completed} rounds already retired)")
     if resumed_from is None:
         sched.begin(0, cfg.rounds)
+        if sidecar is not None and os.path.exists(sidecar):
+            os.remove(sidecar)  # stale history from a previous service
 
     while sched.has_pending():
         phase, r, log = sched.step()
         if log is not None:
             print_round(log, cfg.num_clients)
-            if ckpt_on and len(sched.logs) % args.ckpt_every == 0:
-                path = save_state(args.ckpt_dir, len(sched.logs),
-                                  sched.snapshot().to_tree(),
-                                  keep_last=keep_last)
-                print(f"  checkpoint -> {path}")
+            if sidecar is not None:
+                # appended BEFORE the checkpoint: on crash the sidecar can
+                # only run ahead of the restored state, and _trim_sidecar
+                # truncates the overhang on resume
+                with open(sidecar, "a") as f:
+                    f.write(json.dumps(dataclasses.asdict(log)) + "\n")
+            if ckpt_on and sched.completed % args.ckpt_every == 0:
+                try:
+                    path = save_state(args.ckpt_dir, sched.completed,
+                                      sched.snapshot(logs_tail=0).to_tree(),
+                                      keep_last=keep_last)
+                    print(f"  checkpoint -> {path}")
+                except OSError as e:
+                    # the writer already retried with backoff; a service
+                    # should keep serving on a transient storage outage
+                    # and try again at the next boundary
+                    print(f"  checkpoint FAILED after retries ({e!r}); "
+                          f"continuing without", flush=True)
         if crash_at is not None and (phase, r) == crash_at:
             print(f"crash hook: SIGKILL after ({phase}, {r})", flush=True)
             os.kill(os.getpid(), signal.SIGKILL)
 
-    logs = sched.logs
+    logs = history + sched.logs
     if logs:
         mean_age = sum(l.served_model_age_s for l in logs) / len(logs)
         print(f"\nserved {len(logs)} rounds  final={logs[-1].mean_acc:.4f}"

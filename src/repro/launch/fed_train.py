@@ -147,6 +147,71 @@ def add_config_args(ap: argparse.ArgumentParser) -> None:
                          "pallas = force the kernels (interpret mode "
                          "off-TPU — validates the kernel path, not a CPU "
                          "speedup); jnp = force the reference code")
+    ap.add_argument("--fault-mode", default="none",
+                    choices=["none", "nan", "random_logits", "scaled",
+                             "colluding_flip", "stale_replay"],
+                    help="Byzantine/corruption fault trace "
+                         "(repro.fed.faults): faulty clients train "
+                         "honestly but corrupt the report they send — "
+                         "deterministic in (seed, round, client), so every "
+                         "engine injects identically. none = legacy "
+                         "protocol, bit-for-bit")
+    ap.add_argument("--fault-prob", type=float, default=0.0,
+                    help="transient corruption: independent per-round coin "
+                         "per client (flaky hardware, not an adversary)")
+    ap.add_argument("--byzantine-frac", type=float, default=0.0,
+                    help="fixed adversarial subset: round(frac*C) clients, "
+                         "the same ones every round")
+    ap.add_argument("--fault-start", type=int, default=0,
+                    help="first round the fault trace is active")
+    ap.add_argument("--fault-duration", type=int, default=0,
+                    help="rounds the trace stays active (0 = unbounded); "
+                         "start+duration stages a mid-run burst")
+    ap.add_argument("--robust-aggregation", default="mean",
+                    choices=["mean", "trimmed_mean", "median", "krum_row"],
+                    help="teacher fusion over the client axis "
+                         "(core/aggregation.py): mean = the paper's "
+                         "staleness-weighted masked mean (legacy, "
+                         "bit-for-bit); trimmed_mean/median/krum_row = "
+                         "Byzantine-robust reducers (contributing clients "
+                         "get one vote each; staleness weights act as a "
+                         "contribute/exclude mask)")
+    ap.add_argument("--trim-frac", type=float, default=0.2,
+                    help="trimmed_mean only: fraction trimmed from each "
+                         "tail of the per-position client distribution "
+                         "(in [0, 0.5); beats f attackers when "
+                         "floor(trim*n) >= f)")
+    ap.add_argument("--no-sanitize", action="store_true",
+                    help="disable the server's report sanitize pass "
+                         "(non-finite rows scrubbed and accounted per "
+                         "client before any fusion)")
+    ap.add_argument("--quarantine-threshold", type=float, default=0.0,
+                    help="EWMA trust score above which a client is "
+                         "quarantined (sits out rounds, drains through the "
+                         "staleness buffer; honest clients hover near 1). "
+                         "0 = trust tracking off (legacy)")
+    ap.add_argument("--quarantine-rounds", type=int, default=2,
+                    help="base quarantine length; escalates linearly with "
+                         "a client's strike count")
+    ap.add_argument("--trust-ewma", type=float, default=0.5,
+                    help="EWMA weight on the newest round's outlier "
+                         "distance (in (0, 1]; 1 = no memory)")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="divergence watchdog (repro.fed.scheduler): on a "
+                         "sick RoundLog (non-finite metrics, accuracy "
+                         "collapse, distill-loss spike) roll the experiment "
+                         "back to the last healthy retirement and "
+                         "quarantine the round's top outlier suspects "
+                         "before the deterministic replay")
+    ap.add_argument("--watchdog-acc-drop", type=float, default=0.2,
+                    help="mean-accuracy drop vs the best healthy round "
+                         "that trips the watchdog")
+    ap.add_argument("--watchdog-loss-factor", type=float, default=10.0,
+                    help="distill-loss multiple of the recent healthy "
+                         "median that trips the watchdog")
+    ap.add_argument("--watchdog-max-rollbacks", type=int, default=3,
+                    help="rollback budget per run (spent budget = sick "
+                         "rounds retire as-is)")
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--proxy-fraction", type=float, default=0.2)
@@ -191,6 +256,21 @@ def config_from_args(args: argparse.Namespace) -> FedConfig:
         server_distill_epochs=args.server_distill_epochs,
         zoo=args.zoo,
         concurrent_cohorts=args.concurrent_cohorts,
+        fault_mode=args.fault_mode,
+        fault_prob=args.fault_prob,
+        byzantine_frac=args.byzantine_frac,
+        fault_start=args.fault_start,
+        fault_duration=args.fault_duration,
+        robust_aggregation=args.robust_aggregation,
+        trim_frac=args.trim_frac,
+        sanitize_reports=not args.no_sanitize,
+        quarantine_threshold=args.quarantine_threshold,
+        trust_ewma=args.trust_ewma,
+        quarantine_rounds=args.quarantine_rounds,
+        watchdog=args.watchdog,
+        watchdog_acc_drop=args.watchdog_acc_drop,
+        watchdog_loss_factor=args.watchdog_loss_factor,
+        watchdog_max_rollbacks=args.watchdog_max_rollbacks,
     )
 
 

@@ -23,7 +23,7 @@ def check_parity(num_clients: int, devices: int, method: str = "edgefd",
                  participation_policy: str = "uniform",
                  staleness_decay: float = 0.0,
                  round_mode: str = "auto",
-                 max_inflight: int = 2, rounds: int = 2) -> None:
+                 max_inflight: int = 2, rounds: int = 2, **cfg_kw) -> None:
     import numpy as np
 
     from repro.common.types import FedConfig
@@ -39,7 +39,8 @@ def check_parity(num_clients: int, devices: int, method: str = "edgefd",
                         participation_fraction=participation_fraction,
                         participation_policy=participation_policy,
                         staleness_decay=staleness_decay,
-                        round_mode=round_mode, max_inflight=max_inflight)
+                        round_mode=round_mode, max_inflight=max_inflight,
+                        **cfg_kw)
         results[name] = simulator.run(cfg, "mnist_feat",
                                       n_train=800, n_test=300)
     base = results["loop"]
@@ -73,6 +74,10 @@ def main(argv=None) -> None:
     ap.add_argument("--round-mode", default="auto")
     ap.add_argument("--max-inflight", type=int, default=2)
     ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--fault-mode", default="none")
+    ap.add_argument("--byzantine-frac", type=float, default=0.0)
+    ap.add_argument("--fault-prob", type=float, default=0.0)
+    ap.add_argument("--robust-aggregation", default="mean")
     args = ap.parse_args(argv)
 
     # must happen before the first jax import (device count is init-time)
@@ -90,10 +95,15 @@ def main(argv=None) -> None:
                      participation_policy=args.policy,
                      staleness_decay=args.staleness_decay,
                      round_mode=args.round_mode,
-                     max_inflight=args.max_inflight, rounds=args.rounds)
+                     max_inflight=args.max_inflight, rounds=args.rounds,
+                     fault_mode=args.fault_mode,
+                     byzantine_frac=args.byzantine_frac,
+                     fault_prob=args.fault_prob,
+                     robust_aggregation=args.robust_aggregation)
         print(f"PARITY-OK clients={c} devices={args.devices} "
               f"participation={args.participation} "
-              f"round_mode={args.round_mode}")
+              f"round_mode={args.round_mode} "
+              f"fault_mode={args.fault_mode}")
 
 
 if __name__ == "__main__":

@@ -51,3 +51,128 @@ def test_classwise_means():
     np.testing.assert_allclose(np.asarray(means[1]), [0.0, 5.0])
     np.testing.assert_allclose(np.asarray(means[2]), [0.0, 0.0])
     np.testing.assert_allclose(np.asarray(counts), [2.0, 1.0, 0.0])
+
+
+# --------------------------------------------------------------------------
+# Robust reducers + sanitation (the defense-stack primitives)
+# --------------------------------------------------------------------------
+
+from repro.core.aggregation import (client_outlier_distance, krum_row_logits,
+                                    median_logits, robust_reduce,
+                                    scrub_nonfinite, trimmed_mean_logits)
+
+
+def _attack_stack():
+    """5 clients x 1 position x 2 classes: 4 honest near [1, 2], one
+    masked-out row, one huge-magnitude attacker at index 0."""
+    logits = jnp.asarray([[[1000.0, -1000.0]],
+                          [[1.0, 2.0]],
+                          [[1.2, 1.8]],
+                          [[0.8, 2.2]],
+                          [[55.0, 55.0]]])
+    mask = jnp.asarray([[True], [True], [True], [True], [False]])
+    return logits, mask
+
+
+def test_trimmed_mean_drops_extremes_exactly():
+    """n=4 valid, trim_frac=0.25 -> drop 1 low + 1 high per coordinate:
+    class 0 keeps {1.0, 1.2}, class 1 keeps {2.0, 1.8}."""
+    logits, mask = _attack_stack()
+    teacher, valid = trimmed_mean_logits(logits, mask, trim_frac=0.25)
+    np.testing.assert_allclose(np.asarray(teacher), [[1.1, 1.9]], atol=1e-6)
+    assert bool(valid[0])
+
+
+def test_median_exact_even_and_odd():
+    logits, mask = _attack_stack()
+    teacher, _ = median_logits(logits, mask)  # even n=4: mid-pair average
+    np.testing.assert_allclose(np.asarray(teacher), [[1.1, 1.9]], atol=1e-6)
+    odd = median_logits(logits, mask.at[4, 0].set(True))[0]  # n=5
+    np.testing.assert_allclose(np.asarray(odd), [[1.2, 2.0]], atol=1e-6)
+
+
+def test_median_ignores_nan_rows():
+    """Non-finite rows are invalid regardless of the mask — the reducer's
+    own finite-guard, independent of the server sanitize pass."""
+    logits, mask = _attack_stack()
+    poisoned = logits.at[2].set(jnp.nan)
+    teacher, valid = median_logits(poisoned, mask)  # n=3: 0.8, 1.0, 1000
+    np.testing.assert_allclose(np.asarray(teacher), [[1.0, 2.0]], atol=1e-6)
+    assert bool(valid[0])
+
+
+def test_krum_row_picks_corroborated_row():
+    """Krum selects one *actual* client row, and never the attacker's: the
+    honest cluster corroborates itself."""
+    logits, mask = _attack_stack()
+    teacher, valid = krum_row_logits(logits, mask)
+    honest = np.asarray(logits)[1:4, 0]
+    assert any(np.allclose(np.asarray(teacher)[0], h) for h in honest)
+    assert bool(valid[0])
+
+
+def test_robust_reduce_mean_is_masked_mean_bitwise():
+    """mode="mean" must dispatch to the exact legacy path (bit-for-bit),
+    not a rewritten mean — that is the default-compatibility anchor."""
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(6, 9, 4)).astype(np.float32)
+    mask = rng.random((6, 9)) < 0.7
+    t_ref, v_ref = masked_mean_logits(logits, mask)
+    t_got, v_got = robust_reduce(logits, mask, "mean")
+    np.testing.assert_array_equal(np.asarray(t_got), np.asarray(t_ref))
+    np.testing.assert_array_equal(np.asarray(v_got), np.asarray(v_ref))
+
+
+def test_robust_reducers_match_mean_on_clean_unanimous_input():
+    """With identical honest reports, every reducer returns the same
+    teacher (sanity: robustness costs nothing in the no-attack limit)."""
+    logits = jnp.broadcast_to(jnp.asarray([[1.0, 2.0, 3.0]]), (5, 1, 3))
+    mask = jnp.ones((5, 1), bool)
+    ref = np.asarray(masked_mean_logits(logits, mask)[0])
+    for mode in ("trimmed_mean", "median", "krum_row"):
+        got = np.asarray(robust_reduce(logits, mask, mode)[0])
+        np.testing.assert_allclose(got, ref, atol=1e-6)
+
+
+def test_guard_finite_off_reproduces_nan_poisoning():
+    """guard_finite=False restores the legacy propagation: one NaN row
+    poisons the fused position. This is the attack surface the watchdog
+    exists for (Server passes guard_finite=sanitize)."""
+    logits = jnp.asarray([[[1.0, 2.0]], [[jnp.nan, jnp.nan]]])
+    mask = jnp.ones((2, 1), bool)
+    guarded, _ = masked_mean_logits(logits, mask)  # default: guarded
+    np.testing.assert_allclose(np.asarray(guarded), [[1.0, 2.0]])
+    raw, _ = masked_mean_logits(logits, mask, guard_finite=False)
+    assert not np.isfinite(np.asarray(raw)).any()
+
+
+def test_scrub_nonfinite_counts_and_zero_copy():
+    lo = np.ones((3, 4, 2), np.float32)
+    mk = np.ones((3, 4), bool)
+    same_lo, same_mk, scrubbed = scrub_nonfinite(lo, mk)
+    assert same_lo is lo and same_mk is mk  # clean path: same objects
+    np.testing.assert_array_equal(scrubbed, [0, 0, 0])
+
+    lo2 = lo.copy()
+    lo2[1, :2] = np.inf
+    out_lo, out_mk, scrubbed = scrub_nonfinite(lo2, mk)
+    np.testing.assert_array_equal(scrubbed, [0, 2, 0])
+    assert not out_mk[1, :2].any() and out_mk[1, 2:].all()
+    assert np.isfinite(out_lo).all()
+
+
+def test_client_outlier_distance_scores_attackers():
+    """Far-from-center clients score high, NaN senders score inf, and
+    non-contributing clients are excluded from trust updates."""
+    teacher = np.zeros((4, 3), np.float32)
+    lo = np.zeros((4, 4, 3), np.float32)
+    lo[1] += 10.0          # magnitude attacker
+    lo[2, 0] = np.nan      # nan sender
+    mk = np.ones((4, 4), bool)
+    mk[3] = False          # sat out this round
+    dist, contributing = client_outlier_distance(lo, mk, teacher)
+    assert dist[0] == 0.0
+    assert dist[1] == 100.0
+    assert np.isinf(dist[2])
+    assert dist[3] == 0.0 and not contributing[3]
+    assert list(contributing[:3]) == [True, True, True]

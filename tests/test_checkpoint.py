@@ -169,3 +169,49 @@ def test_restore_with_shardings_device_puts(tmp_path):
     assert isinstance(out["w"], jax.Array)
     assert out["w"].sharding == sh["w"]
     np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(8.0))
+
+
+def test_flaky_writer_retries_then_succeeds(tmp_path, monkeypatch):
+    """Transient OSError from the tmp-file writer: _atomic_savez retries
+    with exponential backoff (sleeping between attempts), warns per
+    failure, and the checkpoint still lands intact."""
+    from repro.checkpoint import ckpt
+
+    real_write = ckpt._write_tmp
+    calls = {"n": 0}
+
+    def flaky(tmp, arrays):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise OSError(28, "No space left on device (injected)")
+        real_write(tmp, arrays)
+
+    sleeps = []
+    monkeypatch.setattr(ckpt, "_write_tmp", flaky)
+    monkeypatch.setattr(ckpt.time, "sleep", sleeps.append)
+    d = str(tmp_path / "ck")
+    with pytest.warns(UserWarning, match="retry"):
+        save_state(d, 7, {"x": np.arange(3)})
+    assert calls["n"] == 3
+    assert sleeps == sorted(sleeps) and len(sleeps) == 2  # backoff grows
+    assert sleeps[1] > sleeps[0]
+    out = restore_state(d, 7)
+    np.testing.assert_array_equal(out["x"], np.arange(3))
+
+
+def test_flaky_writer_exhausts_retries_and_raises(tmp_path, monkeypatch):
+    """A persistent storage fault surfaces as OSError after the retry
+    budget — callers (fed_serve) decide whether to warn-and-continue —
+    and no tmp orphan or torn final file is left behind."""
+    from repro.checkpoint import ckpt
+
+    def always_fail(tmp, arrays):
+        raise OSError(30, "Read-only file system (injected)")
+
+    monkeypatch.setattr(ckpt, "_write_tmp", always_fail)
+    monkeypatch.setattr(ckpt.time, "sleep", lambda s: None)
+    d = str(tmp_path / "ck")
+    with pytest.warns(UserWarning, match="retry"):
+        with pytest.raises(OSError, match="Read-only"):
+            save_state(d, 1, {"x": np.arange(3)})
+    assert latest_step(d) is None  # sweeps any tmp litter, finds nothing

@@ -1,0 +1,304 @@
+"""Byzantine fault injection + the robust defense stack.
+
+Covers the fault-trace layer (deterministic schedules, engine parity under
+every fault mode), the robust reducers end-to-end (trimmed_mean/median
+recover what a plain mean loses at byzantine_frac=0.3), the explicit
+``robust_aggregation="mean"`` golden pin, trust/quarantine kill-and-resume,
+and the divergence watchdog's rollback-and-recover path.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from _resume_prog import check_resume
+from repro.common.types import FedConfig
+from repro.fed import faults, simulator
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "data" / "golden_rounds.json"
+TOL = dict(rtol=0.0, atol=1e-5)
+
+ATTACK_MODES = [m for m in faults.FAULT_MODES if m != "none"]
+
+
+def _cfg(engine="loop", **kw):
+    base = dict(num_clients=5, rounds=2, method="edgefd", scenario="strong",
+                proxy_batch=96, batch_size=32, lr=1e-2, seed=0, engine=engine)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _run(cfg, n_train=500, n_test=200):
+    return simulator.run(cfg, "mnist_feat", n_train=n_train, n_test=n_test)
+
+
+# ------------------------------------------------------------- fault traces
+
+def test_fault_schedule_deterministic_and_windowed():
+    """The trace is a pure function of (seed, round, client): same inputs
+    give the same mask, different seeds/rounds differ, the byzantine
+    subset is exactly round(frac*C) and round-independent, and the
+    start/duration window gates everything."""
+    kw = dict(seed=3, mode="scaled", fault_prob=0.3, byzantine_frac=0.2)
+    m1 = faults.fault_mask(20, 5, **kw)
+    m2 = faults.fault_mask(20, 5, **kw)
+    np.testing.assert_array_equal(m1, m2)
+    assert not np.array_equal(m1, faults.fault_mask(20, 6, **kw))
+    assert not np.array_equal(
+        m1, faults.fault_mask(20, 5, **{**kw, "seed": 4}))
+
+    byz = faults.byzantine_ids(20, seed=3, byzantine_frac=0.2)
+    assert int(byz.sum()) == 4  # round(0.2 * 20)
+    for r in (0, 7, 123):
+        m = faults.fault_mask(20, r, seed=3, mode="nan", byzantine_frac=0.2)
+        np.testing.assert_array_equal(m, byz)  # fixed subset, every round
+
+    win = dict(seed=0, mode="nan", byzantine_frac=0.5, fault_start=3,
+               fault_duration=2)
+    assert faults.fault_mask(8, 2, **win) is None
+    assert faults.fault_mask(8, 3, **win) is not None
+    assert faults.fault_mask(8, 4, **win) is not None
+    assert faults.fault_mask(8, 5, **win) is None
+    # duration 0 = unbounded
+    assert faults.fault_mask(
+        8, 999, seed=0, mode="nan", byzantine_frac=0.5, fault_start=3
+    ) is not None
+
+
+def test_injector_corruption_is_scoped_and_deterministic():
+    """Only faulty participants' rows change; honest rows are untouched;
+    a fault-free round hands back the very same objects (zero-copy)."""
+    inj = faults.FaultInjector(6, mode="colluding_flip", seed=0,
+                               byzantine_frac=0.34)
+    byz = faults.byzantine_ids(6, seed=0, byzantine_frac=0.34)
+    rng = np.random.default_rng(0)
+    lo = rng.normal(size=(6, 4, 3)).astype(np.float32)
+    mk = np.ones((6, 4), bool)
+    out_lo, out_mk = inj.corrupt_reports(0, lo, mk, None)
+    for c in range(6):
+        if byz[c]:
+            np.testing.assert_allclose(out_lo[c], -faults.SCALE_FACTOR * lo[c])
+        else:
+            np.testing.assert_array_equal(out_lo[c], lo[c])
+    np.testing.assert_array_equal(out_mk, mk)
+
+    # participants mask gates injection: with every attacker sampled out,
+    # the payload passes through as the same objects
+    part = ~byz
+    same_lo, same_mk = inj.corrupt_reports(1, lo, mk, part)
+    assert same_lo is lo and same_mk is mk
+
+
+def test_stale_replay_caches_and_replays():
+    """First faulty round passes through (cache warming); the next faulty
+    round replays the cached report; the cache survives a state_dict
+    round-trip."""
+    inj = faults.FaultInjector(3, mode="stale_replay", seed=0,
+                               byzantine_frac=0.4)  # round(0.4*3) = 1 client
+    cid = int(np.nonzero(faults.byzantine_ids(3, seed=0,
+                                              byzantine_frac=0.4))[0][0])
+    r0 = np.full((3, 2, 2), 1.0, np.float32)
+    r1 = np.full((3, 2, 2), 2.0, np.float32)
+    mk = np.ones((3, 2), bool)
+    out0, _ = inj.corrupt_reports(0, r0, mk, None)
+    np.testing.assert_array_equal(out0[cid], r0[cid])  # warmup: unchanged
+
+    inj2 = faults.FaultInjector(3, mode="stale_replay", seed=0,
+                                byzantine_frac=0.4)
+    inj2.load_state_dict(inj.state_dict())
+    out1, _ = inj2.corrupt_reports(1, r1, mk, None)
+    np.testing.assert_array_equal(out1[cid], r0[cid])  # replayed round 0
+    honest = [c for c in range(3) if c != cid]
+    np.testing.assert_array_equal(out1[honest], r1[honest])
+
+
+# -------------------------------------------------- defaults stay bit-exact
+
+def test_explicit_mean_reproduces_golden_logs():
+    """robust_aggregation="mean" + fault_mode="none" spelled out explicitly
+    must replay the pre-robustness goldens bit-for-bit — the whole defense
+    stack defaults to a no-op."""
+    golden = json.loads(GOLDEN_PATH.read_text())
+    for name, engine in [("edgefd_loop", "loop"), ("edgefd_cohort", "cohort")]:
+        cfg = FedConfig(num_clients=4, rounds=2, method="edgefd",
+                        scenario="strong", proxy_batch=128, batch_size=32,
+                        seed=0, engine=engine, round_mode="sync",
+                        kernel_backend="jnp", zoo="shared",
+                        fault_mode="none", robust_aggregation="mean",
+                        sanitize_reports=True)
+        res = simulator.run(cfg, "mnist_feat", n_train=600, n_test=200)
+        for g, n in zip(golden[name], res.rounds):
+            assert g["accs"] == n.accs, (name, n.round)
+            assert g["mean_acc"] == n.mean_acc
+            assert g["local_loss"] == n.local_loss
+            assert g["distill_loss"] == n.distill_loss
+            assert g["id_fraction"] == n.id_fraction
+            assert g["bytes_up"] == n.bytes_up
+            assert g["bytes_down"] == n.bytes_down
+            assert n.scrubbed_rows == 0 and n.quarantined is None
+            assert n.rollbacks == 0
+
+
+# -------------------------------------------------------- engine parity
+
+@pytest.mark.parametrize("mode", ATTACK_MODES)
+def test_fault_parity_loop_vs_cohort(mode):
+    """The injector sits in the engine-independent scheduler path, so loop
+    and cohort produce identical logs under every fault mode."""
+    kw = dict(fault_mode=mode, byzantine_frac=0.4, fault_prob=0.2)
+    loop = _run(_cfg("loop", **kw))
+    cohort = _run(_cfg("cohort", **kw))
+    for rl, rc in zip(loop.rounds, cohort.rounds):
+        np.testing.assert_allclose(rl.accs, rc.accs, **TOL)
+        np.testing.assert_allclose(rl.distill_loss, rc.distill_loss, **TOL)
+        np.testing.assert_allclose(rl.id_fraction, rc.id_fraction, **TOL)
+        assert rl.bytes_up == rc.bytes_up
+        assert rl.scrubbed_rows == rc.scrubbed_rows
+
+
+def test_fault_parity_mesh_subprocess():
+    """Mesh-sharded engine on 4 forced host devices injects the identical
+    fault trace (and reduces robustly) — same subprocess vehicle as
+    tests/test_cohort_parity.py, since jax pins the device count at init."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    prog = os.path.join(here, "_mesh_parity_prog.py")
+    src = os.path.abspath(os.path.join(here, "..", "src"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    res = subprocess.run(
+        [sys.executable, prog, "--devices", "4", "--clients", "5",
+         "--fault-mode", "colluding_flip", "--byzantine-frac", "0.4",
+         "--robust-aggregation", "trimmed_mean"],
+        env=env, capture_output=True, text=True, timeout=540)
+    assert res.returncode == 0, (
+        f"mesh fault parity failed:\n{res.stdout}\n{res.stderr}")
+    assert "PARITY-OK" in res.stdout, res.stdout
+
+
+# ------------------------------------------------ robust reducers, end to end
+
+def test_robust_recovers_where_mean_collapses():
+    """byzantine_frac=0.3 colluding flip: trimmed_mean/median finish within
+    tolerance of the fault-free baseline while the plain mean collapses by
+    at least twice that margin (the BENCH_robust acceptance shape)."""
+    base = dict(num_clients=10, rounds=4, method="edgefd", scenario="iid",
+                proxy_batch=96, batch_size=32)
+    attack = dict(fault_mode="colluding_flip", byzantine_frac=0.3)
+
+    def acc(**kw):
+        return _run(FedConfig(**base, **kw), n_train=600, n_test=250).final_acc
+
+    baseline = acc()
+    mean_atk = acc(**attack)
+    trimmed = acc(**attack, robust_aggregation="trimmed_mean", trim_frac=0.45)
+    median = acc(**attack, robust_aggregation="median")
+    tol = 0.08
+    assert trimmed >= baseline - tol, (trimmed, baseline)
+    assert median >= baseline - tol, (median, baseline)
+    assert mean_atk <= baseline - 2 * tol, (mean_atk, baseline)
+
+
+def test_sanitize_scrubs_nan_and_surfaces_counts():
+    """Default sanitize: a nan attack is scrubbed at ingest, the per-round
+    scrub count lands on RoundLog, and accuracy stays near fault-free."""
+    base = dict(num_clients=6, rounds=3, method="edgefd", scenario="strong",
+                proxy_batch=96, batch_size=32)
+    clean = _run(FedConfig(**base))
+    nan = _run(FedConfig(**base, fault_mode="nan", byzantine_frac=0.34))
+    assert all(r.scrubbed_rows > 0 for r in nan.rounds)
+    assert all(np.isfinite(r.distill_loss) for r in nan.rounds)
+    assert nan.final_acc >= clean.final_acc - 0.15
+
+
+def test_robust_two_tier_e1_equals_flat():
+    """num_edges=1 never enters the partial-fusion path, so the two-tier
+    robust server is *exactly* the flat reducer — the documented anchor of
+    the E>1 approximation."""
+    from repro.core import aggregation
+    from repro.data.proxy import ProxyData
+    from repro.fed.server import Server
+
+    proxy = ProxyData(x=np.zeros((32, 4), np.float32),
+                      y=np.zeros((32,), np.int64),
+                      owner=np.zeros((32,), np.int32))
+    rng = np.random.default_rng(0)
+    lo = rng.normal(size=(6, 32, 5)).astype(np.float32)
+    mk = rng.random((6, 32)) < 0.8
+    srv = Server(proxy, seed=0, num_edges=1,
+                 robust_aggregation="median")
+    teacher, valid = srv.aggregate(lo, mk)
+    t_ref, v_ref = aggregation.robust_reduce(lo, mk, "median")
+    np.testing.assert_array_equal(teacher, np.asarray(t_ref))
+    np.testing.assert_array_equal(valid, np.asarray(v_ref))
+
+
+# --------------------------------------------- quarantine: state + resume
+
+def test_quarantine_triggers_and_resumes_bit_for_bit():
+    """Trust tracking quarantines the scaled attacker, the quarantined
+    rounds drop it from the participant draw, and the whole trust/
+    quarantine/fault state rides kill-and-resume bit-for-bit."""
+    kw = dict(fault_mode="scaled", byzantine_frac=0.25,
+              robust_aggregation="trimmed_mean", trim_frac=0.3,
+              quarantine_threshold=2.0, quarantine_rounds=2)
+    res = _run(_cfg("loop", rounds=3, num_clients=4,
+                    participation_fraction=1.0, **kw))
+    cid = int(np.nonzero(faults.byzantine_ids(4, seed=0,
+                                              byzantine_frac=0.25))[0][0])
+    quarantined = [c for r in res.rounds for c in (r.quarantined or [])]
+    assert cid in quarantined
+    # the round after the event runs without the attacker
+    ev = next(r.round for r in res.rounds if r.quarantined)
+    after = next(r for r in res.rounds if r.round == ev + 1)
+    assert after.participants is not None and cid not in after.participants
+
+    # kill-and-resume at every boundary of round 1, with staleness +
+    # partial participation in the mix (the _resume_prog defaults)
+    n = check_resume("loop", 0, "sync", **kw)
+    assert n == 5
+
+
+def test_stale_replay_cache_resumes_bit_for_bit():
+    """The stale_replay cache is injector state: killing between its warm
+    and replay rounds must not change what gets replayed."""
+    n = check_resume("loop", 0, "sync", fault_mode="stale_replay",
+                     fault_prob=0.4)
+    assert n == 5
+
+
+# ------------------------------------------------------ divergence watchdog
+
+def test_watchdog_rolls_back_and_recovers():
+    """Mid-run nan burst with sanitize OFF (the historical poison path):
+    without the watchdog the service never recovers; with it, the burst
+    round is rolled back, the nan senders are quarantined, pre-burst logs
+    are bit-identical to fault-free, and every retired log is finite."""
+    base = dict(num_clients=6, rounds=4, method="edgefd", scenario="strong",
+                proxy_batch=96, batch_size=32, sanitize_reports=False)
+    burst = dict(fault_mode="nan", byzantine_frac=0.34, fault_start=2,
+                 fault_duration=1)
+    clean = _run(FedConfig(**base))
+    broken = _run(FedConfig(**base, **burst))
+    guarded = _run(FedConfig(**base, **burst, watchdog=True))
+
+    assert not np.isfinite(broken.rounds[-1].distill_loss)  # no defense
+    assert len(guarded.rounds) == 4
+    assert all(np.isfinite(r.mean_acc) and np.isfinite(r.distill_loss)
+               for r in guarded.rounds)
+    assert guarded.rounds[-1].rollbacks >= 1
+    assert any(r.quarantined for r in guarded.rounds)
+    assert guarded.final_acc >= clean.final_acc - 0.15
+    # pre-burst rounds are untouched by the machinery: bit-identical on
+    # every deterministic field (sim timeline fields price at measured
+    # wall-clock under simulator.run, so they never match across runs)
+    def pinned(r):
+        return (r.accs, r.mean_acc, r.local_loss, r.distill_loss,
+                r.id_fraction, r.bytes_up, r.bytes_down)
+
+    for c, g in zip(clean.rounds[:2], guarded.rounds[:2]):
+        assert pinned(c) == pinned(g)

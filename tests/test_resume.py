@@ -90,12 +90,23 @@ def test_fed_serve_sigkill_resume(tmp_path):
         f"{crashed.stdout}\n{crashed.stderr}")
     assert os.path.exists(os.path.join(ckpt, "ckpt_00000001.npz"))
 
+    # the retired-log sidecar is appended before each checkpoint, so it
+    # survives the SIGKILL alongside the checkpoint it belongs to
+    sidecar = os.path.join(ckpt, "logs.jsonl")
+    assert os.path.exists(sidecar)
+
     resumed = subprocess.run(
         common + ["--ckpt-dir", ckpt, "--ckpt-every", "1", "--resume",
                   "--json", str(tmp_path / "resumed.json")],
         env=env, capture_output=True, text=True, timeout=540)
     assert resumed.returncode == 0, resumed.stdout + resumed.stderr
     assert "resumed from checkpoint step 1" in resumed.stdout
+
+    # after the resumed service finishes, the sidecar holds exactly the
+    # full retired history (checkpoints themselves carry no logs)
+    with open(sidecar) as f:
+        side = [json.loads(ln) for ln in f if ln.strip()]
+    assert [d["round"] for d in side] == [0, 1]
 
     ref = subprocess.run(
         common + ["--json", str(tmp_path / "ref.json")],
@@ -108,6 +119,48 @@ def test_fed_serve_sigkill_resume(tmp_path):
                      if k not in _resume_prog.MEASURED_FIELDS}
                     for d in json.load(f)]
     assert load(tmp_path / "resumed.json") == load(tmp_path / "ref.json")
+
+
+def test_logs_tail_keeps_checkpoint_bytes_flat(tmp_path):
+    """Streaming history out of the snapshot (satellite of the robustness
+    PR): with ``logs_tail=0`` the checkpoint carries a monotone
+    ``completed`` counter instead of the log list, so checkpoint bytes
+    stop growing with service age — while full snapshots demonstrably
+    grow round over round. The tail-less tree still restores (fed_serve
+    reconstructs history from the sidecar)."""
+    from repro.checkpoint import save_state
+    from repro.fed.state import ExperimentState
+
+    cfg = FedConfig(num_clients=4, rounds=4, method="edgefd",
+                    scenario="strong", proxy_batch=64, batch_size=32,
+                    seed=0, round_mode="sync")
+    sched = build_sched(cfg)
+    sched.begin(0, cfg.rounds)
+    flat_sizes, full_sizes, trees = [], [], []
+    done = 0
+    while sched.has_pending():
+        _, _, log = sched.step()
+        if log is None:
+            continue
+        done += 1
+        d_flat, d_full = str(tmp_path / f"flat{done}"), str(
+            tmp_path / f"full{done}")
+        p1 = save_state(d_flat, done, sched.snapshot(logs_tail=0).to_tree())
+        p2 = save_state(d_full, done, sched.snapshot().to_tree())
+        flat_sizes.append(os.path.getsize(p1))
+        full_sizes.append(os.path.getsize(p2))
+        trees.append(sched.snapshot(logs_tail=0).to_tree())
+    assert done == 4
+    # full snapshots grow with history; tail-less ones stay flat
+    assert full_sizes[-1] > full_sizes[0]
+    assert max(flat_sizes) - min(flat_sizes) < 512
+    # a tail-less tree restores, with completed preserved and logs empty
+    s2 = build_sched(cfg)
+    s2.restore(ExperimentState.from_tree(trees[1]))
+    assert s2.completed == 2 and s2.logs == []
+    s2.drain()
+    ref = build_sched(cfg).run_rounds(0, cfg.rounds)
+    assert strip(s2.logs) == strip(ref[2:])
 
 
 def test_backpressure_ages_never_negative():
