@@ -32,6 +32,7 @@ from benchmarks.common import emit, timeit
 from repro.core.distill import kd_kl_loss
 from repro.core.dre import KuLSIFDRE
 from repro.core.kmeans import kmeans_fit
+from repro.kernels import dispatch
 from repro.kernels.distill_kl import ops as kl_ops, ref as kl_ref
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.kmeans_dist import ops as kd_ops, ref as kd_ref
@@ -136,6 +137,24 @@ def run_wired(quick=False, backends=BACKENDS):
             iters=3)
     out["kulsif_learn"] = row
     emit("wired/kulsif_learn", row["pallas_s"] * 1e6,
+         f"jnp={row['jnp_s']*1e6:.1f}us")
+
+    # flash attention at its wired call site — the layers layout
+    # dispatch.flash_attention that attention_forward's non-chunked branch
+    # routes — forward + backward (pallas = fused kernel forward +
+    # oracle-recompute custom-VJP backward)
+    Bq, Sq, Nh, Hd = (2, 128, 4, 32) if quick else (4, 512, 8, 64)
+    qa = jax.random.normal(key, (Bq, Sq, Nh, Hd))
+    ka = jax.random.normal(jax.random.fold_in(key, 6), (Bq, Sq, Nh, Hd))
+    va = jax.random.normal(jax.random.fold_in(key, 7), (Bq, Sq, Nh, Hd))
+    row = {"B": Bq, "S": Sq, "N": Nh, "h": Hd}
+    for b in backends:
+        step = jax.jit(jax.grad(lambda qq, b=b: jnp.sum(
+            dispatch.flash_attention(qq, ka, va, causal=True,
+                                     backend=b) ** 2)))
+        row[f"{b}_s"] = timeit(lambda step=step: step(qa), iters=3)
+    out["flash_attention_fwd_bwd"] = row
+    emit("wired/flash_attention", row["pallas_s"] * 1e6,
          f"jnp={row['jnp_s']*1e6:.1f}us")
     return out
 

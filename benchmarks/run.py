@@ -25,6 +25,7 @@ BENCH_WRITERS = {
     "BENCH_cohort_mesh.json": "mesh",
     "BENCH_participation.json": "participation",
     "BENCH_robust.json": "robust",
+    "BENCH_fdx.json": "fdx",
 }
 
 
@@ -54,14 +55,15 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: table3,fig2,table4,fig5,kernels,"
-                         "async,serve,hetero,scale,mesh,participation")
+                         "async,serve,hetero,scale,mesh,participation,"
+                         "robust,fdx")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (async_rounds, cohort_scaling, fig2_dre_cost,
-                            fig5_sweeps, hetero_zoo, kernel_bench,
-                            robust_agg, scale, serve_resume,
+    from benchmarks import (async_rounds, cohort_scaling, fd_transformer,
+                            fig2_dre_cost, fig5_sweeps, hetero_zoo,
+                            kernel_bench, robust_agg, scale, serve_resume,
                             table3_accuracy, table4_complexity)
 
     jobs = [
@@ -91,6 +93,11 @@ def main(argv=None) -> None:
         ("participation", lambda: cohort_scaling.main(
             ["--fractions", "0.5", "1.0"] + (["--clients", "8"]
                                              if quick else []))),
+        # fdx records the 2-D (clients, model) mesh shard sweep of the
+        # transformer cohort — round wall-clock + peak per-device state
+        # bytes vs model_shards — to the repo-root BENCH_fdx.json
+        ("fdx", lambda: fd_transformer.main(
+            ["--quick"] if quick else [])),
         # robust records mean-vs-robust-reducer accuracy under Byzantine
         # clients, compiled reducer overhead, and the watchdog
         # rollback-recovery row to the repo-root BENCH_robust.json

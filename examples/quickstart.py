@@ -43,6 +43,18 @@ cfg = FedConfig(
     # CPU-only hosts emulate an N-device host by setting
     # XLA_FLAGS=--xla_force_host_platform_device_count=N before jax loads.
     num_devices=0,
+    # model_shards=M folds those devices into a 2-D (clients, model) mesh
+    # of shape (num_devices // M, M): the cohort stays vmapped over the
+    # client axis while each client's weight matrices (heads/ff/vocab
+    # dims) shard M-way over the model axis — cohort members bigger than
+    # one device can then be federated. 0 = the 1-D client mesh
+    # bit-for-bit; $REPRO_MODEL_SHARDS fills in for 0. Pairs with the
+    # transformer scenario (dataset "lm_tokens" — every client a reduced
+    # granite backbone with flash-attention on the distill hot path; see
+    # examples/fd_transformers.py). The CLI spells it
+    #   python -m repro.launch.fed_train --dataset lm_tokens \
+    #       --engine cohort --devices 4 --model-shards 2
+    model_shards=0,
     # Fleet scale (see benchmarks/scale.py for a C=16384 round):
     # wave_size=N streams the cohort client axis through the device N
     # clients at a time — params/opt-state/data stay in host numpy and

@@ -156,6 +156,14 @@ class FedConfig:
     # devices with XLA_FLAGS=--xla_force_host_platform_device_count=N.
     num_devices: int = 0
     mesh_axis: str = "clients"
+    # model shards per client (engine="cohort" with num_devices != 0 only):
+    # m > 0 folds the SAME num_devices devices into a 2-D (clients, model)
+    # mesh of shape (num_devices // m, m) — each stacked client's weight
+    # matrices additionally split over the "model" axis (repro.fed.mesh),
+    # so cohort members bigger than one device can be federated. 0 = the
+    # 1-D client mesh bit-for-bit; $REPRO_MODEL_SHARDS fills in for 0
+    # (best-effort, clamped to a divisor of num_devices — the CI vehicle).
+    model_shards: int = 0
     # partial participation (repro.fed.participation): each round a subset of
     # round(participation_fraction * num_clients) clients trains/reports;
     # 1.0 = every client (the paper's setting, bit-for-bit the legacy logs).

@@ -36,6 +36,36 @@ def proxy_features(params, cfg: ArchConfig, proxy_tokens):
     return T.features(params, cfg, proxy_tokens)
 
 
+class TransformerClientModel:
+    """A transformer backbone as a simulator client model.
+
+    Adapts ``models.transformer`` to the MLP/CNN client interface
+    (``init(key)`` / ``apply(params, tokens, train)``) using THIS module's
+    FD conventions: the classifier output is the LAST-position next-token
+    distribution (``fd_loss``'s 'sample logit' for LM clients), so
+    ``num_classes == cfg.vocab_size`` and the generic Client CE/distill
+    machinery trains the backbone unchanged. One shared instance per arch
+    keeps bound-method equality, so the cohort engine stacks all clients of
+    an arch into one vmapped (and, with ``model_shards``, tensor-sharded)
+    compiled phase.
+    """
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return T.init_params(self.cfg, key)
+
+    def apply(self, params, tokens, train: bool = False):
+        logits, _ = T.forward(params, self.cfg, tokens)
+        return logits[:, -1]
+
+    def features(self, params, tokens):
+        """Pooled input embeddings (``proxy_features``) — the paper's
+        model-independent filter space for token data."""
+        return proxy_features(params, self.cfg, tokens)
+
+
 def fd_loss(params, cfg: ArchConfig, private_batch, proxy_tokens, teacher,
             teacher_weight, *, temperature: float = 2.0,
             distill_weight: float = 1.0, remat: bool = False):

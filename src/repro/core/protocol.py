@@ -322,11 +322,14 @@ class LoopEngine:
 
 def as_engine(clients_or_engine, engine: str = "loop", *,
               num_devices: int = 0, mesh_axis: str = "clients",
-              wave_size: int = 0):
+              wave_size: int = 0, model_shards: int = 0):
     """Coerce a plain client list (the historical API) into an engine.
 
-    ``num_devices``/``mesh_axis`` build the cohort engine's 1-D client mesh
+    ``num_devices``/``mesh_axis`` build the cohort engine's client mesh
     (``repro.fed.mesh``): 0 = unsharded, -1 = all devices, N > 0 = exactly N.
+    ``model_shards`` > 0 folds those same devices into a 2-D
+    ``(clients, model)`` mesh so each stacked client's weight matrices are
+    model-sharded too; 0 keeps the 1-D mesh bit-for-bit.
     ``wave_size`` streams the cohort client axis through the device in
     fixed-size waves (``repro.fed.cohort``); 0 = whole axis resident.
     """
@@ -350,7 +353,8 @@ def as_engine(clients_or_engine, engine: str = "loop", *,
         # lazy imports: core must not import fed at load time
         from repro.fed.cohort import CohortEngine
         from repro.fed.mesh import build_client_mesh
-        mesh = build_client_mesh(num_devices, mesh_axis)
+        mesh = build_client_mesh(num_devices, mesh_axis,
+                                 model_shards=model_shards)
         return CohortEngine(clients_or_engine, mesh=mesh, mesh_axis=mesh_axis,
                             wave_size=wave_size)
     if engine != "loop":
@@ -361,6 +365,9 @@ def as_engine(clients_or_engine, engine: str = "loop", *,
     if wave_size:
         raise ValueError("wave_size requires engine='cohort' (the loop "
                          "engine never stacks a client axis to stream)")
+    if model_shards:
+        raise ValueError("model_shards requires engine='cohort' (the loop "
+                         "engine holds each client's params on one device)")
     return LoopEngine(clients_or_engine)
 
 
@@ -373,7 +380,8 @@ def engine_from_config(clients_or_engine, cfg: FedConfig):
     others."""
     return as_engine(clients_or_engine, cfg.engine,
                      num_devices=cfg.num_devices, mesh_axis=cfg.mesh_axis,
-                     wave_size=cfg.wave_size)
+                     wave_size=cfg.wave_size,
+                     model_shards=getattr(cfg, "model_shards", 0))
 
 
 # ---------------------------------------------------------------------------

@@ -45,6 +45,7 @@ class SyntheticSpec:
     image_hw: int = 0            # 0 = flat features, else render to (hw,hw,ch)
     channels: int = 1
     feature_dim: int = 50        # flat-feature output dim
+    seq_len: int = 0             # >0 = token mode: x is (n, seq_len) int32
 
 
 SPECS = {
@@ -61,6 +62,13 @@ SPECS = {
                                 latent_dim=32),
     "cifar_feat_resnet": SyntheticSpec("cifar_feat_resnet", separation=6.0,
                                        within_std=1.1, latent_dim=32),
+    # token mode (transformer clients): each sample is a (seq_len,) int32
+    # token sequence drawn from a narrow vocab band around a latent token
+    # t*, labelled y = t* — an LM next-token task whose classes ARE vocab
+    # entries, so the label partitioners produce vocab-band non-IID (the LM
+    # analogue of the paper's strong scenario) and the bands stay separable
+    # in raw token-id space for the KMeans-DRE filter.
+    "lm_tokens": SyntheticSpec("lm_tokens", num_classes=32, seq_len=16),
 }
 
 
@@ -69,6 +77,22 @@ def make_dataset(name: str, *, n_train: int = 5000, n_test: int = 1000,
     spec = SPECS[name]
     key = jax.random.PRNGKey(seed)
     k_means, k_tr, k_te, k_dec = jax.random.split(key, 4)
+
+    if spec.seq_len:
+        half_w = max(1, spec.num_classes // 16)
+
+        def sample_tokens(k, n):
+            ky, kz = jax.random.split(k)
+            y = jax.random.randint(ky, (n,), 0, spec.num_classes)
+            noise = jax.random.randint(kz, (n, spec.seq_len),
+                                       -half_w, half_w + 1)
+            x = jnp.mod(y[:, None] + noise, spec.num_classes)
+            return x.astype(jnp.int32), y.astype(jnp.int32)
+
+        x_tr, y_tr = sample_tokens(k_tr, n_train)
+        x_te, y_te = sample_tokens(k_te, n_test)
+        return Dataset(x=x_tr, y=y_tr, x_test=x_te, y_test=y_te,
+                       num_classes=spec.num_classes, name=name)
 
     means = jax.random.normal(k_means, (spec.num_classes, spec.latent_dim))
     means = means / jnp.linalg.norm(means, axis=-1, keepdims=True) * spec.separation

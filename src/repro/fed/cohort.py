@@ -86,8 +86,10 @@ from repro.core.dre import KMeansDRE, KuLSIFDRE
 from repro.core.kmeans import kmeans_fit_batched, min_dist_to_centroids
 from repro.fed.batching import padded_epoch_plan, steps_per_epoch
 from repro.fed.client import Client
-from repro.fed.mesh import (DEFAULT_CLIENT_AXIS, padded_size, replicate,
-                            shard_clients)
+from repro.fed.mesh import (DEFAULT_CLIENT_AXIS, MODEL_LOGICAL_RULES,
+                            model_axis_name, padded_size, replicate,
+                            shard_clients, shard_stacked_state,
+                            stacked_state_shardings)
 from repro.kernels import dispatch
 from repro.models.sharding import constrain, logical_rules
 from repro.optim.optimizers import apply_updates
@@ -115,6 +117,9 @@ class _Cohort:
         self.positions = list(positions)     # index into the global client list
         self.mesh = mesh
         self.mesh_axis = mesh_axis
+        # 2-D (clients, model) mesh: weight matrices shard over this axis
+        # too (repro.fed.mesh.stacked_state_shardings); None on a 1-D mesh
+        self.model_axis = model_axis_name(mesh)
         if wave_size < 0:
             raise ValueError(f"wave_size must be >= 0, got {wave_size!r}")
         # wave streaming kicks in only when it would actually split the
@@ -207,9 +212,9 @@ class _Cohort:
             # so the clone is inert ballast that keeps the client axis
             # mesh-divisible
             stand_ins = [members[0]] * (self.c_pad - len(members))
-            self.params = self._put_c(
+            self.params = self._put_state(
                 _stack_trees([c.params for c in [*members, *stand_ins]]))
-            self.opt_state = self._put_c(
+            self.opt_state = self._put_state(
                 _stack_trees([c.opt_state for c in [*members, *stand_ins]]))
 
         # filter state (filled by learn_dres, or packed right away when the
@@ -230,6 +235,13 @@ class _Cohort:
     def _put_rep(self, tree):
         """Place leaves replicated on every mesh device (shared inputs)."""
         return replicate(jax.tree.map(jnp.asarray, tree), self.mesh)
+
+    def _put_state(self, tree):
+        """Place a stacked params/opt-state pytree: client split on a 1-D
+        mesh (bit-for-bit the historical ``_put_c``), per-leaf client ×
+        model ``NamedSharding``s on a 2-D mesh."""
+        return shard_stacked_state(jax.tree.map(jnp.asarray, tree),
+                                   self.mesh, self.mesh_axis)
 
     def _pad_rows(self, arr, fill=None):
         """Pad per-member stacked rows (leading axis C) out to ``c_pad``.
@@ -274,9 +286,9 @@ class _Cohort:
 
     def _stage_state(self, lo: int, hi: int):
         """One wave's params/opt-state, staged host -> device."""
-        pd = self._put_c(jax.tree.map(
+        pd = self._put_state(jax.tree.map(
             lambda leaf: self._stage(leaf, lo, hi, fill=None), self._hparams))
-        od = self._put_c(jax.tree.map(
+        od = self._put_state(jax.tree.map(
             lambda leaf: self._stage(leaf, lo, hi, fill=None), self._hopt))
         return pd, od
 
@@ -294,12 +306,18 @@ class _Cohort:
 
     def _ctx(self):
         """Logical-rules scope for every jitted call: inside it the logical
-        ``"clients"`` axis resolves to this cohort's mesh axis (and nothing
-        else resolves at all), so traces pin outputs to the client mesh and
-        never pick up an outer launcher's model-parallel rules."""
-        return logical_rules({"clients": self.mesh_axis},
-                             self.mesh) if self.mesh is not None \
-            else logical_rules(None, None)
+        ``"clients"`` axis resolves to this cohort's mesh axis, so traces
+        pin outputs to the client mesh and never pick up an outer
+        launcher's model-parallel rules. On a 2-D (clients, model) mesh the
+        model-side logical axes (heads/ff/vocab/experts) resolve to the
+        model axis too, so ``constrain`` calls inside transformer apply_fns
+        keep activations in the Megatron layout (replicated residual
+        stream, model-sharded heads); on a 1-D mesh those rules resolve to
+        nothing and the trace is bit-for-bit the historical one."""
+        if self.mesh is None:
+            return logical_rules(None, None)
+        rules = {**MODEL_LOGICAL_RULES, "clients": self.mesh_axis}
+        return logical_rules(rules, self.mesh)
 
     # ------------------------------------------------------------- jitted ops
     def _build_fns(self):
@@ -307,12 +325,46 @@ class _Cohort:
         temp, loss_kind, k_cls = self.temperature, self.loss_kind, self.num_classes
         backend = self.kernel_backend
 
-        def pinned(fn):
+        # per-leaf output shardings for the training-state outputs: on a
+        # 2-D mesh constraining params to P("clients") alone would undo
+        # the model split every step (and re-replicate each client's
+        # weights across the model axis — exactly the memory the 2-D mesh
+        # exists to save), so state outputs pin to the same per-leaf specs
+        # their inputs were placed with. Shapes come from whichever stack
+        # exists (device stack, or the host masters in waved mode) — only
+        # the non-leading dims matter for the specs and they are equal.
+        if self.model_axis is not None:
+            p_like = self.params if not self._waved else self._hparams
+            o_like = self._hopt if self._waved else self.opt_state
+            p_sh = stacked_state_shardings(p_like, self.mesh, self.mesh_axis)
+            o_sh = stacked_state_shardings(o_like, self.mesh, self.mesh_axis)
+        else:
+            p_sh = o_sh = None
+
+        def pin_clients(tree):
+            return jax.tree.map(lambda leaf: constrain(leaf, "clients"),
+                                tree)
+
+        def pin_state(tree, shardings):
+            if shardings is None:
+                return pin_clients(tree)
+            return jax.tree.map(
+                lambda leaf, sh: jax.lax.with_sharding_constraint(leaf, sh),
+                tree, shardings)
+
+        def pinned(fn, state_out: bool = False):
             """jit(fn) with every output pinned to the client axis (no-op
-            when traced without a mesh in scope — see ``_ctx``)."""
+            when traced without a mesh in scope — see ``_ctx``).
+            ``state_out`` marks fns returning (params, opt_state, losses):
+            their state outputs take the per-leaf client × model specs."""
             def wrapped(*args):
-                return jax.tree.map(lambda leaf: constrain(leaf, "clients"),
-                                    fn(*args))
+                out = fn(*args)
+                if state_out:
+                    params, opt_state, losses = out
+                    return (pin_state(params, p_sh),
+                            pin_state(opt_state, o_sh),
+                            pin_clients(losses))
+                return pin_clients(out)
             return jax.jit(wrapped)
 
         def scan_steps(batch_loss):
@@ -390,12 +442,14 @@ class _Cohort:
                                       (xb, yb, mb))
             return correct
 
-        self._train = pinned(jax.vmap(train_chunk))
+        self._train = pinned(jax.vmap(train_chunk), state_out=True)
         self._distill = pinned(
-            jax.vmap(distill_chunk, in_axes=(0, 0, None, None, 0, 0, 0)))
+            jax.vmap(distill_chunk, in_axes=(0, 0, None, None, 0, 0, 0)),
+            state_out=True)
         self._distill_private = pinned(
             jax.vmap(distill_private_chunk,
-                     in_axes=(0, 0, 0, 0, None, None, 0, 0, 0)))
+                     in_axes=(0, 0, 0, 0, None, None, 0, 0, 0)),
+            state_out=True)
         self._predict = pinned(
             jax.vmap(lambda p, xb: apply_fn(p, xb, False), in_axes=(0, None)))
         self._eval = pinned(
@@ -947,9 +1001,9 @@ class _Cohort:
                                       *[c.opt_state for c in members])
             return
         stand_ins = [members[0]] * (self.c_pad - len(members))
-        self.params = self._put_c(
+        self.params = self._put_state(
             _stack_trees([c.params for c in [*members, *stand_ins]]))
-        self.opt_state = self._put_c(
+        self.opt_state = self._put_state(
             _stack_trees([c.opt_state for c in [*members, *stand_ins]]))
 
 

@@ -1,10 +1,11 @@
-"""1-D client mesh for the cohort engine: devices along the client axis.
+"""Client/model device mesh for the cohort engine.
 
 The cohort engine stacks clients into leading-axis ``(C, ...)`` pytrees
 (``repro.fed.cohort``) — a shape that is already mesh-ready: every round
-phase is independent per client, so sharding the leading axis over a 1-D
-device mesh partitions the whole round with zero cross-device collectives
-(the only cross-client ops — server aggregation — happen on host).
+phase is independent per client, so sharding the leading axis over the
+``"clients"`` mesh axis partitions the whole round with zero cross-device
+collectives (the only cross-client ops — server aggregation — happen on
+host).
 
 ``build_client_mesh`` builds that mesh over ``jax.devices()``. On CPU-only
 hosts XLA exposes one device by default; set
@@ -15,54 +16,209 @@ hosts XLA exposes one device by default; set
 exercises the sharded path — see ``tests/test_cohort_parity.py`` and the
 multi-device job in ``.github/workflows/ci.yml``).
 
-Cohorts whose client count is not a multiple of the mesh size are padded
-with *dummy clients* (``padded_size``): their per-step validity flags are
-all False, so the engine's existing ``_where_tree`` gating turns every
-training step into a no-op and their outputs are sliced off before any
-result leaves the engine.
+2-D mesh: clients × model shards
+--------------------------------
+``model_shards > 0`` folds the same ``num_devices`` devices into a 2-D
+``(clients, model)`` mesh of shape ``(num_devices // model_shards,
+model_shards)``: the stacked client axis still splits over ``"clients"``,
+and each client's *weight matrices* additionally split over ``"model"``
+(per-leaf ``NamedSharding``s from :func:`stacked_state_shardings`, driven
+by the FSDP/tensor templates in ``repro.launch.mesh.param_spec``). This is
+what lets a cohort member bigger than one device be federated at all — the
+ROADMAP's "2-D mesh" item. ``model_shards = 0`` (the default) keeps
+today's 1-D client mesh bit-for-bit.
+
+The ``REPRO_MODEL_SHARDS`` environment variable fills in when a config
+leaves ``model_shards`` at 0 (the CI matrix vehicle, like
+``REPRO_KERNEL_BACKEND``). The env request is best-effort: it is clamped
+to ``gcd(num_devices, env)`` so every device count in the test matrix
+still builds a valid mesh; an explicit config value is strict and raises
+on impossible shapes instead.
+
+Cohorts whose client count is not a multiple of the *client-axis* size are
+padded with *dummy clients* (``padded_size``): their per-step validity
+flags are all False, so the engine's existing ``_where_tree`` gating turns
+every training step into a no-op and their outputs are sliced off before
+any result leaves the engine.
 """
 from __future__ import annotations
 
-from typing import Optional
+import math
+import os
+from typing import Optional, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 DEFAULT_CLIENT_AXIS = "clients"
+# launch.mesh.param_spec's name-aware templates key on the literal axis
+# name "model", so the 2-D client mesh reuses it verbatim
+DEFAULT_MODEL_AXIS = "model"
+MODEL_SHARDS_ENV = "REPRO_MODEL_SHARDS"
+
+# logical-axis rules installed by the cohort engine's trace scope when a
+# model axis exists: activations stay replicated across model shards
+# (batch/seq/embed -> None, the Megatron residual-stream layout) while
+# heads/ff/vocab/experts ride the "model" axis, matching the param specs.
+# On a 1-D mesh every "model" entry resolves to nothing (the axis is not
+# in the mesh), so installing these is exactly the historical behavior.
+MODEL_LOGICAL_RULES = {
+    "batch": None,
+    "seq": None,
+    "embed": None,
+    "heads": DEFAULT_MODEL_AXIS,
+    "kv_heads": DEFAULT_MODEL_AXIS,
+    "head_dim": None,
+    "ff": DEFAULT_MODEL_AXIS,
+    "vocab": DEFAULT_MODEL_AXIS,
+    "experts": DEFAULT_MODEL_AXIS,
+    "kv_seq": None,
+    "vision_seq": None,
+}
+
+
+def resolve_model_shards(model_shards: int = 0) -> int:
+    """Resolve a ``model_shards`` request: explicit value > env > 0 (1-D).
+
+    The returned value is still a *request* — :func:`build_client_mesh`
+    clamps an env-sourced request to a divisor of ``num_devices``."""
+    if model_shards < 0:
+        raise ValueError(
+            f"model_shards must be >= 0, got {model_shards!r} "
+            "(0 = the 1-D client mesh)")
+    if model_shards == 0:
+        env = os.environ.get(MODEL_SHARDS_ENV, "").strip()
+        if env:
+            try:
+                model_shards = int(env)
+            except ValueError:
+                raise ValueError(
+                    f"${MODEL_SHARDS_ENV}={env!r} is not an integer")
+            if model_shards < 0:
+                raise ValueError(
+                    f"${MODEL_SHARDS_ENV}={env!r} must be >= 0")
+    return model_shards
+
+
+def build_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """N-D mesh over the first ``prod(shape)`` visible devices.
+
+    The single device-layout code path: ``build_client_mesh`` and the
+    launcher factories (``repro.launch.mesh.make_debug_mesh`` /
+    ``make_production_mesh``) all route through here. Device order is the
+    deterministic ``jax.devices()`` order folded row-major — topology-naive
+    but reproducible, which is what the parity/golden tests lean on.
+    Raises a legible ``ValueError`` when the host has too few devices.
+    """
+    shape = tuple(int(s) for s in shape)
+    if len(shape) != len(axes):
+        raise ValueError(f"mesh shape {shape} has {len(shape)} dims but "
+                         f"{len(axes)} axis names: {tuple(axes)!r}")
+    if any(s <= 0 for s in shape):
+        raise ValueError(f"mesh shape must be positive, got {shape}")
+    devices = jax.devices()
+    total = int(np.prod(shape))
+    if total > len(devices):
+        detail = " × ".join(f"{s} {a!r}" for s, a in zip(shape, axes))
+        raise ValueError(
+            f"requested a {total}-device mesh ({detail}) but only "
+            f"{len(devices)} jax device(s) are visible; on CPU hosts set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{total} before the first jax import")
+    return Mesh(np.asarray(devices[:total]).reshape(shape), tuple(axes))
 
 
 def build_client_mesh(num_devices: int = 0,
-                      axis: str = DEFAULT_CLIENT_AXIS) -> Optional[Mesh]:
-    """Build the 1-D client mesh, or ``None`` for the unsharded path.
+                      axis: str = DEFAULT_CLIENT_AXIS,
+                      model_shards: int = 0,
+                      model_axis: str = DEFAULT_MODEL_AXIS) -> Optional[Mesh]:
+    """Build the client mesh, or ``None`` for the unsharded path.
 
     ``num_devices``: 0 = no mesh (single-device semantics, the default);
     ``-1`` = all visible devices; ``N > 0`` = exactly N devices (a clear
-    error if fewer are visible).
+    error if fewer are visible). ``num_devices`` always counts TOTAL
+    devices — with ``model_shards = m > 0`` they fold into a
+    ``(num_devices // m, m)`` 2-D ``(clients, model)`` mesh, so the same
+    ``num_devices`` never over-subscribes the host when a model dimension
+    is added. ``model_shards = 0`` resolves through ``$REPRO_MODEL_SHARDS``
+    (clamped to a divisor of ``num_devices``); with neither set the
+    historical 1-D mesh is returned bit-for-bit.
     """
+    from_env = model_shards == 0
+    model_shards = resolve_model_shards(model_shards)
     if num_devices == 0:
+        if model_shards > 0 and not from_env:
+            raise ValueError(
+                f"model_shards={model_shards} requires a device mesh; set "
+                "num_devices (e.g. -1 for all visible devices)")
         return None
     devices = jax.devices()
     if num_devices < 0:
         num_devices = len(devices)
     if num_devices > len(devices):
+        extra = ""
+        if model_shards > 0:
+            extra = (f" (num_devices counts TOTAL devices — the clients × "
+                     f"model_shards={model_shards} product must fit)")
         raise ValueError(
             f"requested a {num_devices}-device client mesh but only "
             f"{len(devices)} jax device(s) are visible; on CPU hosts set "
             "XLA_FLAGS=--xla_force_host_platform_device_count="
-            f"{num_devices} before the first jax import")
-    return Mesh(devices[:num_devices], (axis,))
+            f"{num_devices} before the first jax import" + extra)
+    if model_shards == 0:
+        return build_mesh((num_devices,), (axis,))
+    if from_env:
+        # env requests are a CI sweep vehicle: clamp instead of exploding
+        # matrix entries whose device count the env does not divide
+        model_shards = math.gcd(num_devices, model_shards)
+    elif num_devices % model_shards:
+        raise ValueError(
+            f"model_shards={model_shards} cannot tile a "
+            f"{num_devices}-device mesh: num_devices must be a positive "
+            f"multiple of model_shards (the mesh folds to "
+            f"(num_devices // model_shards, model_shards) = clients × "
+            "model)")
+    if model_shards == 1:
+        # one shard per model IS no model sharding: the historical 1-D
+        # client mesh, bit-for-bit — also where an env-clamped request
+        # lands on hosts whose device count the env does not divide, so
+        # a $REPRO_MODEL_SHARDS CI sweep never perturbs 1-device entries
+        return build_mesh((num_devices,), (axis,))
+    return build_mesh((num_devices // model_shards, model_shards),
+                      (axis, model_axis))
+
+
+def client_axis_size(mesh: Optional[Mesh]) -> int:
+    """Devices along the client (leading) axis — NOT ``devices.size``,
+    which would count model shards on a 2-D mesh."""
+    if mesh is None:
+        return 1
+    return int(mesh.devices.shape[0])
+
+
+def model_axis_name(mesh: Optional[Mesh]) -> Optional[str]:
+    """The model axis name of a 2-D client mesh, else ``None``."""
+    if mesh is None or len(mesh.axis_names) < 2:
+        return None
+    return mesh.axis_names[1]
 
 
 def padded_size(count: int, mesh: Optional[Mesh]) -> int:
-    """Client-axis length after padding to a multiple of the mesh size."""
+    """Client-axis length after padding to a multiple of the client-axis
+    device count (model shards never pad the client axis)."""
     if mesh is None:
         return count
-    d = mesh.devices.size
+    d = client_axis_size(mesh)
     return ((count + d - 1) // d) * d
 
 
 def client_sharding(mesh: Mesh, axis: str = DEFAULT_CLIENT_AXIS) -> NamedSharding:
-    """Sharding that splits the leading (client) axis across the mesh."""
+    """Sharding that splits the leading (client) axis across the mesh.
+
+    On a 2-D mesh the remaining dims replicate across model shards — the
+    right placement for per-client *data*; params/opt-state go through
+    :func:`stacked_state_shardings` instead."""
     return NamedSharding(mesh, P(axis))
 
 
@@ -90,3 +246,52 @@ def replicate(tree, mesh: Optional[Mesh]):
         return tree
     s = replicated_sharding(mesh)
     return jax.tree.map(lambda leaf: jax.device_put(leaf, s), tree)
+
+
+def stacked_state_shardings(tree, mesh: Mesh,
+                            axis: str = DEFAULT_CLIENT_AXIS):
+    """Per-leaf ``NamedSharding``s for a stacked ``(C, ...)`` state pytree.
+
+    Dim 0 (the client stack) splits over ``axis``; the remaining dims of
+    each leaf take the name-aware FSDP/tensor template from
+    ``repro.launch.mesh.param_spec`` (wq/wk/wv heads -> model, ff -> model,
+    embed vocab -> model, largest-divisible fallback for plain dense
+    leaves), with the client axis counted as one extra stack axis on top
+    of any layer-stack axes. Works for params and optimizer state alike —
+    optimizer moments mirror the param paths, and extra scalar leaves
+    (step counters) degrade to a pure client split.
+
+    On a 1-D mesh this reduces to ``P(axis)`` for every leaf, i.e. exactly
+    :func:`client_sharding`.
+    """
+    from repro.launch.mesh import _stack_depth, param_spec
+
+    def leaf(path, x):
+        shape = tuple(x.shape)
+        if not shape:
+            return replicated_sharding(mesh)
+        name = next((str(p.key) for p in reversed(path)
+                     if hasattr(p, "key")), None)
+        spec = param_spec(shape, mesh, n_stack_axes=1 + _stack_depth(path),
+                          fsdp=True, name=name)
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        parts[0] = axis
+        while parts and parts[-1] is None:      # normalize: P(a) == P(a,)
+            parts.pop()
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def shard_stacked_state(tree, mesh: Optional[Mesh],
+                        axis: str = DEFAULT_CLIENT_AXIS):
+    """Place a stacked ``(C, ...)`` params/opt-state pytree on the mesh:
+    client split only on a 1-D mesh (the historical placement, bit-for-bit),
+    client × model per-leaf shardings on a 2-D mesh. No-op without a mesh.
+    """
+    if mesh is None:
+        return tree
+    if model_axis_name(mesh) is None:
+        return shard_clients(tree, mesh, axis)
+    shardings = stacked_state_shardings(tree, mesh, axis)
+    return jax.tree.map(jax.device_put, tree, shardings)

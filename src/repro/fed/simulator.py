@@ -94,13 +94,28 @@ def build_experiment(cfg: FedConfig, dataset_name: str = "mnist_feat",
                     or qthresh > 0)
     method = get_method(cfg.method)
 
-    image_mode = np.asarray(ds.x).ndim == 4
+    x_arr = np.asarray(ds.x)
+    image_mode = x_arr.ndim == 4
+    # token mode: (n, S) integer sequences → transformer clients (the
+    # engine-backed version of examples/fd_transformers.py)
+    token_mode = x_arr.ndim == 2 and np.issubdtype(x_arr.dtype, np.integer)
     zoo = resolve_zoo(getattr(cfg, "zoo", "auto"))
     key = jax.random.PRNGKey(cfg.seed)
     clients: List[Client] = []
     # one shared optimizer & (in feature mode) one shared apply_fn per
     # architecture so the cohort engine can stack clients with equal arch_key
     shared_opt = sgd(cfg.lr)
+    transformer_model = None
+    if token_mode:
+        # reduced same-family granite backbone sized for CPU lanes; vocab =
+        # the dataset's label space (fd_trainer's last-position sample-logit
+        # convention). head/ff/vocab dims all divide by 2 and 4, so the 2-D
+        # (clients, model) mesh shards them at model_shards ∈ {2, 4}.
+        from repro.configs import get_arch, reduced
+        from repro.core.fd_trainer import TransformerClientModel
+        t_cfg = reduced(get_arch("granite-8b"), layers=2, d_model=64,
+                        vocab=ds.num_classes)
+        transformer_model = TransformerClientModel(t_cfg)
     # feature-mode zoo: "shared" = one MLP for everyone (the historical
     # population); "mixed" = three width variants cycled by cid % 3, so the
     # cohort engine sees three architecture cohorts. Image mode is already
@@ -117,6 +132,10 @@ def build_experiment(cfg: FedConfig, dataset_name: str = "mnist_feat",
             params = spec.init(sub, hw, ch)
             apply_fn = spec.apply
             arch_key = ("cnn", img_ds, cid % 10)       # Tables I/II zoo slot
+        elif token_mode:
+            params = transformer_model.init(sub)
+            apply_fn = transformer_model.apply
+            arch_key = ("transformer", transformer_model.cfg.name)
         else:
             vi = cid % len(variants)
             if mlps[vi] is None:
@@ -145,6 +164,11 @@ def build_experiment(cfg: FedConfig, dataset_name: str = "mnist_feat",
         if image_mode:
             spec, hw, ch = get_client_model(0, img_ds)
             server.attach_student(spec.apply, spec.init(sub, hw, ch),
+                                  shared_opt, temperature=cfg.temperature,
+                                  seed=cfg.seed)
+        elif token_mode:
+            server.attach_student(transformer_model.apply,
+                                  transformer_model.init(sub),
                                   shared_opt, temperature=cfg.temperature,
                                   seed=cfg.seed)
         else:

@@ -190,3 +190,26 @@ def rbf_matrix(a, b, sigma, *, backend: Optional[str] = None):
         from repro.kernels.kulsif_rbf import ops as rbf_ops
         return rbf_ops.rbf_matrix(a, b, sigma)
     return _rbf_matrix_jnp(a, b, sigma)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    backend: Optional[str] = None):
+    """Full-sequence attention in the model layout: q/k/v (B, S, N, h),
+    kv already GQA-expanded. Returns (B, S, N, h) in ``v.dtype``.
+
+    The transformer local-train/distill hot path. The jnp route is
+    op-for-op ``models.layers``' historical mask + scores sequence (the
+    default-backend bit-for-bit guarantee rides on it); the Pallas route
+    is the fused flash kernel (O(S) memory, online softmax), which covers
+    causal/full attention only — a sliding ``window`` always takes the
+    reference path regardless of backend. Differentiable on both routes
+    (the kernel carries a ``custom_vjp``; see ``flash_attention.ops``).
+    """
+    if window == 0 and resolve(backend) == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        o = fa_ops.attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                             v.swapaxes(1, 2), causal=causal)
+        return o.swapaxes(1, 2).astype(v.dtype)
+    from repro.models import layers as L
+    mask = L.make_mask(q.shape[1], k.shape[1], causal=causal, window=window)
+    return L.attention_scores(q, k, v, mask)

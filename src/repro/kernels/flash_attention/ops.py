@@ -1,4 +1,12 @@
-"""Jit'd public wrapper: GQA expansion, padding, layout for flash attention."""
+"""Jit'd public wrapper: GQA expansion, padding, layout for flash attention.
+
+The pallas kernel is forward-only (no transpose rule), so ``attention`` is
+a ``custom_vjp``: forward runs the fused kernel, backward recomputes via
+the jnp oracle (``ref.attention`` is the same mathematical function, so
+its VJP is exact up to float reassociation) — flash-attention's standard
+no-materialised-probs recompute strategy, reusing the oracle instead of a
+second hand-written kernel.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,19 +15,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret, pad_to
+from repro.kernels.flash_attention import ref as _ref
 from repro.kernels.flash_attention.kernel import (BLOCK_K, BLOCK_Q,
                                                   flash_attention_pallas)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("causal", "block_q", "block_k", "interpret"))
-def _run(q, k, v, causal, block_q, block_k, interpret):
-    b, n, sq, h = q.shape
-    nkv = k.shape[1]
-    if nkv != n:  # GQA expand
+def _expand_gqa(q, k, v):
+    n, nkv = q.shape[1], k.shape[1]
+    if nkv != n:
         rep = n // nkv
         k = jnp.repeat(k, rep, axis=1)
         v = jnp.repeat(v, rep, axis=1)
+    return k, v
+
+
+def _pallas_fwd(q, k, v, causal, block_q, block_k, interpret):
+    k, v = _expand_gqa(q, k, v)
     qp, sq0 = pad_to(q, 2, block_q)
     kp, sk0 = pad_to(k, 2, block_k)
     vp, _ = pad_to(v, 2, block_k)
@@ -27,6 +38,37 @@ def _run(q, k, v, causal, block_q, block_k, interpret):
                                  block_q=block_q, block_k=block_k,
                                  interpret=interpret)
     return out[:, :, :sq0]
+
+
+def _ref_gqa(q, k, v, causal):
+    """Oracle with the wrapper's GQA expansion and output dtype —
+    ``jnp.repeat``'s own VJP sums the grouped kv cotangents correctly."""
+    k, v = _expand_gqa(q, k, v)
+    return _ref.attention(q, k, v, causal=causal).astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _attn(q, k, v, causal, block_q, block_k, interpret):
+    return _pallas_fwd(q, k, v, causal, block_q, block_k, interpret)
+
+
+def _attn_fwd(q, k, v, causal, block_q, block_k, interpret):
+    return _pallas_fwd(q, k, v, causal, block_q, block_k, interpret), (q, k, v)
+
+
+def _attn_bwd(causal, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _ref_gqa(q_, k_, v_, causal), q, k, v)
+    return vjp(g)
+
+
+_attn.defvjp(_attn_fwd, _attn_bwd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k", "interpret"))
+def _run(q, k, v, causal, block_q, block_k, interpret):
+    return _attn(q, k, v, causal, block_q, block_k, interpret)
 
 
 def attention(q, k, v, *, causal: bool = True, block_q: int = BLOCK_Q,

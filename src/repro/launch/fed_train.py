@@ -29,7 +29,14 @@ def add_config_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--method", default="edgefd", choices=sorted(METHODS))
     ap.add_argument("--scenario", default="strong",
                     choices=["strong", "weak", "iid"])
-    ap.add_argument("--dataset", default="mnist_feat")
+    ap.add_argument("--dataset", default="mnist_feat",
+                    help="synthetic dataset (repro.data.synthetic.SPECS): "
+                         "*_feat = flat features (MLP zoo), *_like = images "
+                         "(CNN zoo), lm_tokens = int32 token sequences — "
+                         "each client is a reduced granite transformer "
+                         "(core/fd_trainer.py) distilling last-position "
+                         "next-token logits, with flash-attention on the "
+                         "hot path via --kernel-backend")
     ap.add_argument("--engine", default="loop", choices=["loop", "cohort"],
                     help="loop = per-client python loop; cohort = vmapped "
                          "homogeneous cohorts (fed/cohort.py)")
@@ -38,6 +45,16 @@ def add_config_args(ap: argparse.ArgumentParser) -> None:
                          "mesh: 0 = unsharded, -1 = all jax devices, N = "
                          "exactly N (CPU hosts: set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N). "
+                         "Requires --engine cohort")
+    ap.add_argument("--model-shards", type=int, default=0,
+                    help="fold the --devices mesh into a 2-D "
+                         "(clients, model) mesh: each stacked client's "
+                         "weight matrices additionally shard M-way over "
+                         "the model axis (heads/ff/vocab dims — "
+                         "repro.fed.mesh), so cohort members bigger than "
+                         "one device can be federated. --devices must be "
+                         "divisible by M. 0 = the 1-D client mesh "
+                         "bit-for-bit (REPRO_MODEL_SHARDS can fill in). "
                          "Requires --engine cohort")
     ap.add_argument("--wave-size", type=int, default=0,
                     help="stream the cohort client axis through the device "
@@ -238,6 +255,7 @@ def config_from_args(args: argparse.Namespace) -> FedConfig:
         seed=args.seed,
         engine=args.engine,
         num_devices=args.devices,
+        model_shards=args.model_shards,
         wave_size=args.wave_size,
         num_edge_aggregators=args.edge_aggregators,
         arrival_process=args.arrival_process,

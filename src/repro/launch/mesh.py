@@ -18,14 +18,21 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Thin wrapper over the single device-layout builder
+    (``repro.fed.mesh.build_mesh``): deterministic ``jax.devices()`` order
+    folded row-major, with the same legible too-few-devices error as the
+    federated client mesh."""
+    from repro.fed.mesh import build_mesh
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return build_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
-    """Tiny mesh over however many (CPU) devices exist — for tests."""
-    return jax.make_mesh((data, model), ("data", "model"))
+    """Tiny mesh over however many (CPU) devices exist — for tests.
+    Routed through ``repro.fed.mesh.build_mesh`` like every other mesh."""
+    from repro.fed.mesh import build_mesh
+    return build_mesh((data, model), ("data", "model"))
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +105,16 @@ def param_spec(shape: tuple, mesh: Mesh, *, n_stack_axes: int = 0,
                 return
             ax = tuple(a for a in ax if a != "data") or None
             if ax is None:
+                return
+            if len(ax) == 1:
+                ax = ax[0]
+        if isinstance(ax, tuple):
+            # Size-1 mesh axes are inert — drop them so a joint template
+            # still shards over whatever remains (the federated
+            # (clients, model) mesh has no 'data' axis, but wd's Megatron
+            # out-psum placement on 'model' is still wanted there).
+            ax = tuple(a for a in ax if sizes[a] > 1)
+            if not ax:
                 return
             if len(ax) == 1:
                 ax = ax[0]

@@ -219,8 +219,10 @@ def attention_forward(p, x, cfg, *, positions=None, causal=True,
         o = chunked_attention(q, kk, vv, causal=causal, window=window,
                               chunk_q=chunk)
     else:
-        mask = make_mask(s, kk.shape[1], causal=causal, window=window)
-        o = attention_scores(q, kk, vv, mask)
+        # dispatched: jnp route == the historical make_mask+attention_scores
+        # sequence bit-for-bit; pallas route = the fused flash kernel
+        from repro.kernels import dispatch
+        o = dispatch.flash_attention(q, kk, vv, causal=causal, window=window)
     o = constrain(o, "batch", "seq", "heads", "head_dim")
     out = psum_einsum("bsnh,nhd->bsd", o, p["wo"])
     return constrain(out, "batch", "seq", "embed")

@@ -23,26 +23,29 @@ def check_parity(num_clients: int, devices: int, method: str = "edgefd",
                  participation_policy: str = "uniform",
                  staleness_decay: float = 0.0,
                  round_mode: str = "auto",
-                 max_inflight: int = 2, rounds: int = 2, **cfg_kw) -> None:
+                 max_inflight: int = 2, rounds: int = 2,
+                 model_shards: int = 0, dataset: str = "mnist_feat",
+                 n_train: int = 800, n_test: int = 300, **cfg_kw) -> None:
     import numpy as np
 
     from repro.common.types import FedConfig
     from repro.fed import simulator
 
     results = {}
-    for name, engine, ndev in (("loop", "loop", 0),
-                               ("cohort", "cohort", 0),
-                               ("mesh", "cohort", devices)):
+    for name, engine, ndev, ms in (("loop", "loop", 0, 0),
+                                   ("cohort", "cohort", 0, 0),
+                                   ("mesh", "cohort", devices, model_shards)):
         cfg = FedConfig(num_clients=num_clients, rounds=rounds, method=method,
                         scenario=scenario, proxy_batch=120, batch_size=32,
                         lr=1e-2, seed=0, engine=engine, num_devices=ndev,
+                        model_shards=ms,
                         participation_fraction=participation_fraction,
                         participation_policy=participation_policy,
                         staleness_decay=staleness_decay,
                         round_mode=round_mode, max_inflight=max_inflight,
                         **cfg_kw)
-        results[name] = simulator.run(cfg, "mnist_feat",
-                                      n_train=800, n_test=300)
+        results[name] = simulator.run(cfg, dataset,
+                                      n_train=n_train, n_test=n_test)
     base = results["loop"]
     for name in ("cohort", "mesh"):
         other = results[name]
@@ -74,6 +77,10 @@ def main(argv=None) -> None:
     ap.add_argument("--round-mode", default="auto")
     ap.add_argument("--max-inflight", type=int, default=2)
     ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--model-shards", type=int, default=0,
+                    help="2-D mesh for the sharded entry: fold --devices "
+                         "into a (devices // M, M) (clients, model) mesh")
+    ap.add_argument("--dataset", default="mnist_feat")
     ap.add_argument("--fault-mode", default="none")
     ap.add_argument("--byzantine-frac", type=float, default=0.0)
     ap.add_argument("--fault-prob", type=float, default=0.0)
@@ -91,6 +98,8 @@ def main(argv=None) -> None:
         f"{jax.device_count()} — XLA_FLAGS arrived after jax init?")
     for c in args.clients:
         check_parity(c, args.devices,
+                     model_shards=args.model_shards,
+                     dataset=args.dataset,
                      participation_fraction=args.participation,
                      participation_policy=args.policy,
                      staleness_decay=args.staleness_decay,
@@ -101,6 +110,7 @@ def main(argv=None) -> None:
                      fault_prob=args.fault_prob,
                      robust_aggregation=args.robust_aggregation)
         print(f"PARITY-OK clients={c} devices={args.devices} "
+              f"model_shards={args.model_shards} dataset={args.dataset} "
               f"participation={args.participation} "
               f"round_mode={args.round_mode} "
               f"fault_mode={args.fault_mode}")

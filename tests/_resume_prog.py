@@ -37,14 +37,14 @@ def _cfg(engine: str, devices: int, round_mode: str, **kw):
     return FedConfig(**base)
 
 
-def build_sched(cfg):
+def build_sched(cfg, dataset: str = "mnist_feat"):
     import jax
 
     from repro.core.methods import get_method
     from repro.fed.scheduler import RoundScheduler
     from repro.fed.simulator import build_engine, build_experiment
     clients, server, x_test, y_test = build_experiment(
-        cfg, "mnist_feat", n_train=400, n_test=100, mlp_hidden=(16,))
+        cfg, dataset, n_train=400, n_test=100, mlp_hidden=(16,))
     engine = build_engine(clients, cfg)
     method = get_method(cfg.method)
     if method.client_filter != "none":
@@ -59,10 +59,11 @@ def strip(logs):
 
 
 def check_resume(engine: str, devices: int, round_mode: str,
-                 crash_round: int = 1, boundaries=None, **cfg_kw) -> int:
+                 crash_round: int = 1, boundaries=None,
+                 dataset: str = "mnist_feat", **cfg_kw) -> int:
     """Snapshot at every phase boundary of ``crash_round``; resume each."""
     cfg = _cfg(engine, devices, round_mode, **cfg_kw)
-    ref_sched = build_sched(cfg)
+    ref_sched = build_sched(cfg, dataset)
     ref_sched.begin(0, cfg.rounds)
     snaps = []
     while ref_sched.has_pending():
@@ -72,7 +73,7 @@ def check_resume(engine: str, devices: int, round_mode: str,
     ref = strip(ref_sched.logs)
     assert snaps, "crash round never executed"
     for (phase, r), tree in snaps:
-        sched = build_sched(cfg)  # fresh-process semantics
+        sched = build_sched(cfg, dataset)  # fresh-process semantics
         sched.restore(tree)
         sched.drain()
         got = strip(sched.logs)
@@ -126,6 +127,10 @@ def main(argv=None) -> None:
     ap.add_argument("--devices", type=int, default=4)
     ap.add_argument("--engine", default="cohort")
     ap.add_argument("--round-mode", default="overlap")
+    ap.add_argument("--model-shards", type=int, default=0,
+                    help="2-D (clients, model) mesh: fold --devices into "
+                         "a (devices // M, M) mesh for the sharded runs")
+    ap.add_argument("--dataset", default="mnist_feat")
     ap.add_argument("--cross", action="store_true",
                     help="also check mesh<->loop cross-engine restore")
     args = ap.parse_args(argv)
@@ -139,8 +144,10 @@ def main(argv=None) -> None:
     assert jax.device_count() >= args.devices, (
         f"forced {args.devices} host devices but jax sees "
         f"{jax.device_count()} — XLA_FLAGS arrived after jax init?")
-    n = check_resume(args.engine, args.devices, args.round_mode)
+    n = check_resume(args.engine, args.devices, args.round_mode,
+                     model_shards=args.model_shards, dataset=args.dataset)
     print(f"RESUME-OK engine={args.engine} devices={args.devices} "
+          f"model_shards={args.model_shards} dataset={args.dataset} "
           f"mode={args.round_mode} boundaries={n}")
     if args.cross:
         check_cross_engine("cohort", args.devices, "loop", 0)

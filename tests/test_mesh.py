@@ -91,3 +91,123 @@ def test_single_device_mesh_parity():
                                    rtol=0.0, atol=1e-5)
         np.testing.assert_allclose(a.id_fraction, b.id_fraction,
                                    rtol=0.0, atol=1e-5)
+
+
+# ------------------------------------------------- 2-D (clients, model)
+
+def test_build_client_mesh_2d_shape():
+    """model_shards folds the SAME num_devices into a (clients, model)
+    mesh — never over-subscribing the host."""
+    if jax.device_count() >= 4:
+        m = M.build_client_mesh(4, model_shards=2)
+        assert m.axis_names == ("clients", "model")
+        assert m.devices.shape == (2, 2)
+        assert M.client_axis_size(m) == 2
+        assert M.model_axis_name(m) == "model"
+    # one shard per model IS no model sharding: explicit model_shards=1
+    # degrades to the historical 1-D client mesh bit-for-bit
+    m1 = M.build_client_mesh(1, model_shards=1)
+    assert m1.axis_names == ("clients",)
+    assert M.model_axis_name(m1) is None
+
+
+def test_model_shards_is_off_on_1d_mesh():
+    m = M.build_client_mesh(1)
+    assert m.axis_names == ("clients",)
+    assert M.model_axis_name(m) is None
+    assert M.model_axis_name(None) is None
+    assert M.client_axis_size(None) == 1
+
+
+def test_model_shards_without_mesh_raises():
+    with pytest.raises(ValueError, match="requires a device mesh"):
+        M.build_client_mesh(0, model_shards=2)
+
+
+def test_model_shards_nondivisible_raises():
+    with pytest.raises(ValueError, match="cannot tile"):
+        M.build_client_mesh(1, model_shards=3)
+
+
+def test_too_many_devices_error_mentions_product():
+    with pytest.raises(ValueError, match="TOTAL devices"):
+        M.build_client_mesh(jax.device_count() + 2, model_shards=2)
+    # and still carries the historical actionable hint
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        M.build_client_mesh(jax.device_count() + 2, model_shards=2)
+
+
+def test_env_model_shards_is_clamped_not_fatal(monkeypatch):
+    """$REPRO_MODEL_SHARDS is a CI sweep vehicle: a value the device count
+    cannot tile clamps to gcd(num_devices, env) instead of exploding the
+    matrix entry. An explicit config value stays strict (above)."""
+    monkeypatch.setenv(M.MODEL_SHARDS_ENV, "3")
+    m = M.build_client_mesh(1)          # gcd(1, 3) == 1 -> no model axis
+    assert m.devices.shape == (1,)
+    assert m.axis_names == ("clients",)
+    # env never forces a mesh into a meshless run
+    assert M.build_client_mesh(0) is None
+
+
+def test_resolve_model_shards_validation(monkeypatch):
+    with pytest.raises(ValueError, match=">= 0"):
+        M.resolve_model_shards(-1)
+    monkeypatch.setenv(M.MODEL_SHARDS_ENV, "nope")
+    with pytest.raises(ValueError, match="not an integer"):
+        M.resolve_model_shards(0)
+    monkeypatch.setenv(M.MODEL_SHARDS_ENV, "2")
+    assert M.resolve_model_shards(0) == 2
+    assert M.resolve_model_shards(4) == 4   # explicit beats env
+
+
+def test_build_mesh_validates_shape():
+    with pytest.raises(ValueError, match="axis names"):
+        M.build_mesh((1, 1), ("clients",))
+    with pytest.raises(ValueError, match="positive"):
+        M.build_mesh((0,), ("clients",))
+
+
+def test_padded_size_uses_client_axis_only():
+    class Fake2D:                       # only .devices.shape is read
+        devices = np.zeros((2, 2))
+
+    assert M.padded_size(5, Fake2D) == 6    # multiple of 2, not of 4
+    assert M.padded_size(2, Fake2D) == 2
+
+
+def test_stacked_state_shardings_1d_is_client_split():
+    m = M.build_client_mesh(1)
+    tree = {"w": np.zeros((4, 8, 6)), "b": np.zeros((4, 6)),
+            "step": np.zeros(())}
+    sh = M.stacked_state_shardings(tree, m)
+    assert sh["w"].spec == jax.sharding.PartitionSpec("clients")
+    assert sh["b"].spec == jax.sharding.PartitionSpec("clients")
+    assert sh["step"].spec == jax.sharding.PartitionSpec()
+
+
+@pytest.mark.skipif(jax.device_count() < 4, reason="needs 4 devices")
+def test_stacked_state_shardings_2d_splits_model_dims():
+    """On a 2x2 mesh a stacked transformer param tree gets client x model
+    specs: wq heads -> model, embed vocab -> model, biases stay
+    client-split, scalars replicate."""
+    from jax.sharding import PartitionSpec as P
+    m = M.build_client_mesh(4, model_shards=2)
+    C, L = 2, 2
+    tree = {"embed": np.zeros((C, 32, 64)),
+            "blocks": {"wq": np.zeros((C, L, 64, 4, 16)),
+                       "bq": np.zeros((C, L, 4, 16))},
+            "step": np.zeros(())}
+    sh = M.stacked_state_shardings(tree, m)
+    assert sh["embed"].spec == P("clients", "model")
+    assert sh["blocks"]["wq"].spec == P("clients", None, None, "model")
+    assert sh["step"].spec == P()
+
+
+@pytest.mark.skipif(jax.device_count() < 4, reason="needs 4 devices")
+def test_shard_stacked_state_places_and_roundtrips():
+    m = M.build_client_mesh(4, model_shards=2)
+    tree = {"w": np.arange(2 * 8 * 4, dtype=np.float32).reshape(2, 8, 4)}
+    placed = M.shard_stacked_state(tree, m)
+    np.testing.assert_array_equal(np.asarray(placed["w"]), tree["w"])
+    assert placed["w"].sharding.mesh.axis_names == ("clients", "model")
